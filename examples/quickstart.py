@@ -1,0 +1,48 @@
+"""Quickstart: DASH schedules end to end on CPU in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Builds the paper's four schedules, verifies the closed forms (§3.2–3.4);
+2. runs the Pallas DASH backward kernel (interpret mode) against the jnp oracle;
+3. shows bitwise determinism of the schedule-ordered dQ accumulation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedules as S, simulator as sim
+from repro.core.schedules import make_schedule
+from repro.kernels.flash_fwd import flash_fwd
+from repro.kernels.flash_bwd import flash_bwd
+
+n, m, c, r = 8, 4, 1.0, 0.3
+
+print("== DASH schedules: simulated makespan vs paper closed forms ==")
+for name, causal in [("fa3", True), ("descending", True),
+                     ("symmetric_shift", True), ("fa3", False), ("shift", False)]:
+    sch = (S.fa3(n, m, causal) if name == "fa3"
+           else S.descending(n, m, causal) if name == "descending"
+           else make_schedule(name, n, m, causal))
+    ms = sim.simulate(sch, c, r)
+    cf = sim.closed_form(name, n, m, c, r, causal)
+    print(f"  {name:16s} causal={causal!s:5s} makespan={ms.makespan:7.2f} "
+          f"closed_form={cf:7.2f} utilization={ms.utilization:.2f}")
+
+print("\n== Pallas DASH backward (interpret mode) vs oracle ==")
+B, Sq, D = 1, 512, 64
+ks = jax.random.split(jax.random.PRNGKey(0), 4)
+q, k, v, do = (jax.random.normal(kk, (B, Sq, D), jnp.float32) for kk in ks)
+out, lse = flash_fwd(q, k, v, causal=True, interpret=True)
+from repro.kernels import ref
+rdq, rdk, rdv = ref.mha_bwd(q, k, v, out, lse, do, causal=True)
+for sched in ("fa3", "descending", "symmetric_shift"):
+    schedule = make_schedule(sched, Sq // 128, 1, True)
+    dq, dk, dv = flash_bwd(q, k, v, out, lse, do, schedule, causal=True,
+                           interpret=True)
+    print(f"  {sched:16s} max|dq-oracle| = {float(jnp.max(jnp.abs(dq-rdq))):.2e}")
+
+print("\n== determinism: same schedule → identical bits ==")
+schedule = make_schedule("symmetric_shift", Sq // 128, 1, True)
+a = flash_bwd(q, k, v, out, lse, do, schedule, causal=True, interpret=True)[0]
+b = flash_bwd(q, k, v, out, lse, do, schedule, causal=True, interpret=True)[0]
+print("  bitwise identical:", bool(jnp.all(a == b)))

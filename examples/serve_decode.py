@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + greedy decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch whisper-base]
+
+Exercises the same prefill/decode step functions the 32k/500k dry-run cells
+lower, including cross-attention caches for the enc-dec arch.
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

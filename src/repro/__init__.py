@@ -1,0 +1,8 @@
+"""DASH on TPU: Deterministic Attention Scheduling for High-throughput
+Reproducible LLM Training — JAX/Pallas framework reproduction.
+
+Subpackages: core (schedules/DAG/simulator/determinism), kernels (Pallas),
+models, dist, train, serve, data, ckpt, configs, launch. See README.md.
+"""
+
+__version__ = "1.0.0"

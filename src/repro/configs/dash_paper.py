@@ -1,0 +1,9 @@
+"""The paper's own benchmark configuration (§4.1): hidden 2048, head dims
+{64, 128}, total tokens 16384, seqs 512..16k — used by benchmarks/, not dry-run."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dash-paper", family="dense",
+    n_layers=1, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+    vocab=32_000, head_dim_=64,
+)

@@ -1,0 +1,13 @@
+"""internvl2-1b [vlm] — arXiv:2404.16821 (hf tier).
+LM backbone (Qwen2-0.5B): 24L d=896 14H (GQA kv=2) ff=4864 vocab=151655, QKV bias.
+InternViT frontend is a STUB: input_specs provides precomputed patch embeddings
+(B, 256, 1024) which a learned projector maps into the LM (DESIGN.md §7)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab=151_655, qkv_bias=True, rope_theta=1_000_000.0,
+    frontend="vision", frontend_dim=1024, frontend_len=256,
+    shard_heads=False, shard_kv=False,  # 14 heads % 16 != 0: replicate attention
+)

@@ -1,0 +1,43 @@
+"""Architecture registry: the 10 assigned configs + the paper's own benchmark
+config. ``get(name)`` returns a ModelConfig; ``--arch <id>`` in the launchers
+resolves through here. Sources/verification tiers are noted per config file."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "stablelm_1_6b",
+    "qwen1_5_110b",
+    "nemotron_4_15b",
+    "mistral_nemo_12b",
+    "xlstm_350m",
+    "internvl2_1b",
+    "phi3_5_moe",
+    "llama4_scout",
+    "jamba_1_5_large",
+    "whisper_base",
+]
+
+ALIASES = {
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "xlstm-350m": "xlstm_350m",
+    "internvl2-1b": "internvl2_1b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "llama4-scout-17b-a16e": "llama4_scout",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "whisper-base": "whisper_base",
+    "dash-paper": "dash_paper",
+}
+
+
+def get(name: str):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_arch_names():
+    return list(ARCHS)

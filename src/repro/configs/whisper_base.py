@@ -1,0 +1,23 @@
+"""whisper-base [audio] — arXiv:2212.04356 (unverified tier).
+Enc-dec, 6L+6L d=512 8H ff=2048 vocab=51865; conv/audio frontend is a STUB:
+input_specs provides precomputed frame embeddings (B, 1500, 512). Real whisper
+caps decoder positions at 448; the assigned 32k decode shape exercises the cache
+machinery beyond that (noted in DESIGN.md §7). Learned absolute positions."""
+from repro.configs.base import ModelConfig
+
+_ENC = ModelConfig(
+    name="whisper-base-enc", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab=51_865, norm="layernorm", activation="gelu", pos_embed="learned",
+    rope_pct=0.0, frontend="audio", frontend_dim=512, frontend_len=1500,
+    shard_heads=False, shard_kv=False, max_seq=1500,
+)
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab=51_865, norm="layernorm", activation="gelu", pos_embed="learned",
+    rope_pct=0.0, block_pattern=("attn_cross",),
+    encoder=_ENC, frontend_dim=512, frontend_len=1500,
+    shard_heads=False, shard_kv=False,
+)

@@ -1,0 +1,3 @@
+"""The paper's primary contribution: DASH schedules, the DAG model (Lemma 1),
+the Gantt simulator reproducing §3's closed forms, and deterministic reduction
+primitives."""

@@ -1,0 +1,53 @@
+"""ASCII Gantt rendering of simulated schedules — the paper's Figs. 2–4/6–7 as
+runnable artifacts (see examples/gantt_demo.py and tests/test_gantt.py)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.schedules import Schedule
+from repro.core.simulator import SimResult, simulate
+
+
+def render(schedule: Schedule, result: SimResult = None, c: float = 1.0,
+           r: float = 0.5, width: int = 100) -> str:
+    """One row per worker; digits = q-tile id during compute, '-' = blocked
+    waiting for its reduction turn (the deterministic-order stall — the paper's
+    bubbles), '#' = reduction phase, '.' = idle."""
+    if result is None:
+        result = simulate(schedule, c, r)
+    span = result.makespan
+    scale = width / span
+    rows = []
+    for w, chain in enumerate(schedule.chains):
+        row = ["."] * width
+        for task in chain:
+            cs, rs, re = result.task_times[task]
+            ce = cs + c
+            q = task[2]
+            for col in range(int(cs * scale), min(width, int(ce * scale))):
+                row[col] = str(q % 10)
+            for col in range(int(ce * scale), min(width, int(rs * scale))):
+                row[col] = "-"
+            for col in range(int(rs * scale), min(width, int(re * scale))):
+                row[col] = "#"
+        rows.append(f"W{w:02d} |" + "".join(row) + "|")
+    head = (f"{schedule.name} causal={schedule.causal} n={schedule.n_workers} "
+            f"m={schedule.n_heads} | makespan={result.makespan:.1f} "
+            f"util={result.utilization:.2f}")
+    return head + "\n" + "\n".join(rows)
+
+
+def compare(n: int = 8, m: int = 2, c: float = 1.0, r: float = 0.5,
+            causal: bool = True) -> str:
+    """Side-by-side rendering of the applicable schedules (paper Fig. 3 vs 4
+    vs 7 for causal; Fig. 3 vs 6 for full)."""
+    from repro.core import schedules as S
+    names = (["fa3", "descending", "symmetric_shift"] if causal
+             else ["fa3", "shift"])
+    blocks = []
+    for nm in names:
+        sch = (S.fa3(n, m, causal) if nm == "fa3"
+               else S.descending(n, m, causal) if nm == "descending"
+               else S.make_schedule(nm, n, m, causal))
+        blocks.append(render(sch, c=c, r=r))
+    return "\n\n".join(blocks)

@@ -1,0 +1,296 @@
+"""DASH schedules (paper §3): task orders for the deterministic attention backward pass.
+
+The deterministic backward pass processes tasks ``(head, kv_tile, q_tile)``. Each task
+has a compute phase (cost ``c``) producing local dK/dV contributions plus a partial
+dQ, followed by a reduction phase (cost ``r``) that accumulates the partial dQ into
+the global dQ buffer **in a prescribed order per (head, q) column** — that order is
+what makes the pass deterministic.
+
+A :class:`Schedule` fixes simultaneously
+  * the per-worker task chains (paper §3.1 constraint: all tasks of one KV tile must
+    run contiguously on one worker so dK/dV stay accumulator-resident), and
+  * the per-(head, q) reduction order.
+
+Four generators are provided, mirroring the paper:
+
+``fa3``              the FlashAttention-3 deterministic baseline (ascending Q tiles,
+                     reduction serialized by ascending KV index).  §3.2
+``descending``       Descending Q-Tile Iteration (reverse Q traversal; on causal
+                     masks, alternate heads reverse the KV→worker assignment so a
+                     head-pair is load balanced).  §3.3
+``shift``            Shift Scheduling for full masks — worker ``i`` visits Q tiles
+                     ``(i, i+1, …, n-1, 0, …, i-1)``; provably optimal (Lemma 1). §3.4
+``symmetric_shift``  Symmetric Shift Scheduling for causal masks — KV rows ``i`` and
+                     ``n-1-i`` are paired across a head pair and the two triangles
+                     fold into a dense n×(n+1) virtual rectangle traversed cyclically
+                     with offsets on segment boundaries ("diagonal-initialized shift
+                     on the conceptual square", §3.4 + Fig. 7).
+
+Schedules are plain data: they drive (a) the Gantt :mod:`repro.core.simulator`,
+(b) the Pallas backward kernel's scalar-prefetch index maps
+(:mod:`repro.kernels.flash_bwd`), and (c) the cross-chip ring/context-parallel
+step order (:mod:`repro.dist.ring_attention`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+Task = Tuple[int, int, int]  # (head, kv_tile, q_tile)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A deterministic attention-backward schedule.
+
+    Attributes:
+      name: generator name (``fa3`` / ``descending`` / ``shift`` / ``symmetric_shift``).
+      causal: mask shape. Valid tasks are ``q >= kv`` when causal, all when full.
+      n_workers: number of workers (GPU SMs in the paper; Pallas "virtual workers" /
+        CP devices in this repo).
+      n_kv / n_q: tile counts. The paper analyses ``n_kv == n_workers``.
+      n_heads: number of attention heads scheduled as one pipeline.
+      chains: per-worker task lists; contiguous execution order.
+      reduction_order: per ``(head, q)`` the prescribed accumulation order given as a
+        list of ``(kv, worker)`` in reduction sequence. Deterministic by construction.
+    """
+
+    name: str
+    causal: bool
+    n_workers: int
+    n_kv: int
+    n_q: int
+    n_heads: int
+    chains: Tuple[Tuple[Task, ...], ...]
+    reduction_order: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]]
+
+    # ---------------------------------------------------------------- helpers
+    def valid_cells(self) -> set:
+        cells = set()
+        for h in range(self.n_heads):
+            for kv in range(self.n_kv):
+                for q in range(self.n_q):
+                    if (not self.causal) or q >= kv:
+                        cells.add((h, kv, q))
+        return cells
+
+    def all_tasks(self) -> List[Task]:
+        return [t for chain in self.chains for t in chain]
+
+    def validate(self) -> None:
+        """Check the paper's structural invariants. Raises AssertionError on violation."""
+        tasks = self.all_tasks()
+        # 1. exact cover of the valid (head, kv, q) cells
+        assert len(tasks) == len(set(tasks)), "duplicate task"
+        assert set(tasks) == self.valid_cells(), "schedule does not cover mask cells"
+        # 2. contiguity: all tasks of one (head, kv) row form one unbroken run on one worker
+        seen_rows = {}
+        for w, chain in enumerate(self.chains):
+            prev_row = None
+            for (h, kv, q) in chain:
+                row = (h, kv)
+                if row != prev_row:
+                    assert row not in seen_rows, (
+                        f"KV row {row} split across workers/runs (paper §3.1 constraint)")
+                    seen_rows[row] = w
+                prev_row = row
+        # 3. reduction orders cover each column exactly
+        for h in range(self.n_heads):
+            for q in range(self.n_q):
+                col = [(kv) for kv in range(self.n_kv)
+                       if (not self.causal) or q >= kv]
+                order = self.reduction_order[(h, q)]
+                assert sorted(kv for kv, _ in order) == sorted(col), (
+                    f"reduction order for column {(h, q)} incomplete")
+
+    # -------------------------------------------------------- kernel emission
+    def prefetch_arrays(self, head: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-head (kv_ids, q_ids) int32 arrays for the Pallas scalar-prefetch grid.
+
+        On TPU the Pallas grid executes sequentially on one core, so the n worker
+        chains are serialized worker-major; contiguity of KV rows is preserved, which
+        is what keeps the dK/dV accumulator VMEM-resident between grid steps.
+        """
+        kv_ids, q_ids = [], []
+        for chain in self.chains:
+            for (h, kv, q) in chain:
+                if h == head:
+                    kv_ids.append(kv)
+                    q_ids.append(q)
+        return (np.asarray(kv_ids, np.int32), np.asarray(q_ids, np.int32))
+
+    def worker_slots(self) -> Dict[Task, Tuple[int, int]]:
+        """task -> (worker, position in chain)."""
+        out = {}
+        for w, chain in enumerate(self.chains):
+            for pos, t in enumerate(chain):
+                out[t] = (w, pos)
+        return out
+
+
+# =============================================================================
+# generators
+# =============================================================================
+def _columns(n_kv: int, n_q: int, causal: bool, head: int):
+    cols: Dict[Tuple[int, int], List[int]] = {}
+    for q in range(n_q):
+        cols[(head, q)] = [kv for kv in range(n_kv) if (not causal) or q >= kv]
+    return cols
+
+
+def fa3(n: int, n_heads: int = 1, causal: bool = False, n_q: int | None = None) -> Schedule:
+    """FlashAttention-3 deterministic baseline (paper §3.2).
+
+    Worker ``i`` owns KV tile ``i`` for every head and iterates Q tiles ascending.
+    dQ columns reduce in ascending KV order. Closed forms (simulator-verified):
+    full  ``T = m·n·(c+r) + (n-1)·r``;  causal ``T = m·n·(c+r) + (n-1)·r``
+    (same as full despite ~half the work — the head-long bubble of Fig. 3b).
+    """
+    n_q = n if n_q is None else n_q
+    chains = []
+    for w in range(n):
+        chain = []
+        for h in range(n_heads):
+            qs = [q for q in range(n_q) if (not causal) or q >= w]
+            chain += [(h, w, q) for q in qs]
+        chains.append(tuple(chain))
+    red = {}
+    for h in range(n_heads):
+        for (hq, q), col in _columns(n, n_q, causal, h).items():
+            red[(hq, q)] = tuple((kv, kv) for kv in sorted(col))  # worker == kv here
+    return Schedule("fa3", causal, n, n, n_q, n_heads, tuple(chains), red)
+
+
+def descending(n: int, n_heads: int = 1, causal: bool = True) -> Schedule:
+    """Descending Q-Tile Iteration (paper §3.3).
+
+    Q tiles are traversed in reverse. For causal masks the KV→worker assignment is
+    mirrored on odd heads (worker ``i`` takes row ``n-1-i``) so a head pair carries
+    ``n+1`` tasks per worker; short chains finish first and the next head back-fills.
+    Closed form: ``T ≈ m(n+1)(c+r)/2 + (n-1)r`` for even m (causal).
+    """
+    chains = []
+    owner = {}  # (head, kv) -> worker
+    for w in range(n):
+        chain = []
+        for h in range(n_heads):
+            kv = w if (h % 2 == 0 or not causal) else n - 1 - w
+            owner[(h, kv)] = w
+            qs = [q for q in range(n - 1, -1, -1) if (not causal) or q >= kv]
+            chain += [(h, kv, q) for q in qs]
+        chains.append(tuple(chain))
+    red = {}
+    for h in range(n_heads):
+        for (hq, q), col in _columns(n, n, causal, h).items():
+            red[(hq, q)] = tuple((kv, owner.get((h, kv), kv)) for kv in sorted(col))
+    return Schedule("descending", causal, n, n, n, n_heads, tuple(chains), red)
+
+
+def shift(n: int, n_heads: int = 1, n_q: int | None = None) -> Schedule:
+    """Shift Scheduling for full masks (paper §3.4, Fig. 6) — optimal.
+
+    Worker ``i`` visits Q tiles ``(i, i+1, …, n_q-1, 0, …, i-1)``: at any time slot
+    all workers occupy distinct Q columns, so the serialized dQ reductions are
+    conflict-free and depth-monotone (Lemma 1).  ``T = m·n·(c+r)`` exactly.
+    """
+    n_q = n if n_q is None else n_q
+    chains = []
+    for w in range(n):
+        chain = []
+        for h in range(n_heads):
+            chain += [(h, w, (w + t) % n_q) for t in range(n_q)]
+        chains.append(tuple(chain))
+    red = {}
+    for h in range(n_heads):
+        for q in range(n_q):
+            # worker i reduces column q at slot (q - i) mod n_q; order by slot.
+            order = sorted(range(n), key=lambda i: (q - i) % n_q)
+            red[(h, q)] = tuple((i, i) for i in order)
+    return Schedule("shift", False, n, n, n_q, n_heads, tuple(chains), red)
+
+
+def symmetric_shift(n: int, n_heads: int = 2) -> Schedule:
+    """Symmetric Shift Scheduling for causal masks (paper §3.4, Fig. 7) — optimal.
+
+    Construction (the "conceptual square" fold, realized over a head pair):
+    for heads ``(A, B) = (2k, 2k+1)`` worker ``i`` owns KV row ``i`` of head A
+    (``n-i`` tasks) and KV row ``n-1-i`` of head B (``i+1`` tasks) — the symmetric
+    longest-with-shortest pairing; together ``n+1`` tasks.  Lay the pair out as a
+    dense ``n × (n+1)`` virtual rectangle:
+
+      virtual column ``v_A(q) = n-1-q``  (head A rows descend in q  → Descending!)
+      virtual column ``v_B(q) = q+1``    (head B rows ascend in q)
+
+    Every (head, q) column maps to exactly one virtual column, so the cyclic
+    traversal ``v = (start_i + t) mod (n+1)`` with ``start_i = n - i`` (a segment
+    boundary, keeping both KV rows contiguous) is conflict-free and depth-monotone.
+    ``T = m(n+1)(c+r)/2`` exactly for even m — the paper's optimum.
+
+    For odd ``n_heads`` the final head falls back to the descending heuristic.
+    """
+    chains: List[List[Task]] = [[] for _ in range(n)]
+    red: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]] = {}
+    n_pairs, odd = divmod(n_heads, 2)
+    for k in range(n_pairs):
+        hA, hB = 2 * k, 2 * k + 1
+        slot_of: Dict[Task, int] = {}
+        for w in range(n):
+            # canonical list indexed by virtual column v in [0, n+1)
+            canon: List[Task] = [None] * (n + 1)
+            for q in range(w, n):          # head A row w, descending via v = n-1-q
+                canon[n - 1 - q] = (hA, w, q)
+            for q in range(n - 1 - w, n):  # head B row n-1-w, ascending via v = q+1
+                canon[q + 1] = (hB, n - 1 - w, q)
+            start = n - w
+            order = [canon[(start + t) % (n + 1)] for t in range(n + 1)]
+            assert all(t is not None for t in order)
+            chains[w] += order
+            for t_slot, task in enumerate(order):
+                slot_of[task] = t_slot
+        # reduction order per column: by execution slot (distinct by construction)
+        for h, v_of_q in ((hA, lambda q: n - 1 - q), (hB, lambda q: q + 1)):
+            for q in range(n):
+                col = []
+                for kv in range(q + 1):
+                    w = kv if h == hA else n - 1 - kv
+                    col.append((kv, w, slot_of[(h, kv, q)]))
+                col.sort(key=lambda x: x[2])
+                red[(h, q)] = tuple((kv, w) for kv, w, _ in col)
+    if odd:
+        # final unpaired head: descending heuristic, standalone
+        h = n_heads - 1
+        for w in range(n):
+            chains[w] += [(h, w, q) for q in range(n - 1, w - 1, -1)]
+        for q in range(n):
+            red[(h, q)] = tuple((kv, kv) for kv in range(q + 1))
+    return Schedule("symmetric_shift", True, n, n, n, n_heads,
+                    tuple(tuple(c) for c in chains), red)
+
+
+GENERATORS = {
+    "fa3": fa3,
+    "descending": descending,
+    "shift": shift,
+    "symmetric_shift": symmetric_shift,
+}
+
+
+def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False) -> Schedule:
+    """Uniform entry point used by kernels / CP / benchmarks."""
+    if name == "fa3":
+        return fa3(n, n_heads, causal)
+    if name == "descending":
+        return descending(n, n_heads, causal)
+    if name == "shift":
+        if causal:
+            raise ValueError("shift scheduling is the full-mask optimum; "
+                             "use symmetric_shift for causal masks (paper §3.4)")
+        return shift(n, n_heads)
+    if name == "symmetric_shift":
+        if not causal:
+            raise ValueError("symmetric_shift is the causal-mask optimum; "
+                             "use shift for full masks (paper §3.4)")
+        return symmetric_shift(n, n_heads)
+    raise KeyError(f"unknown schedule {name!r}; available: {sorted(GENERATORS)}")

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels: flash attention forward + DASH-scheduled deterministic
+backward (scalar-prefetch grid order = the paper's SM schedule). ops.py is the
+jit'd custom_vjp wrapper; ref.py the pure-jnp oracle; vmem.py the footprint
+accounting. Validated in interpret mode on CPU (TPU is the target)."""

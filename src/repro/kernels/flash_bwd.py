@@ -1,0 +1,219 @@
+"""DASH deterministic flash-attention backward Pallas TPU kernel (paper §3 + Alg. 1).
+
+TPU adaptation of the paper's schedule-driven single-pass backward:
+
+* The GPU maps (KV tile → SM) and races on dQ accumulation; a TPU TensorCore runs
+  the Pallas grid **sequentially**, so the DASH schedule is realized as the *grid
+  serialization order*: scalar-prefetch arrays ``kv_ids[t], q_ids[t]`` (emitted from
+  :class:`repro.core.schedules.Schedule`) drive every BlockSpec index map. Causal
+  schedules contain only valid tiles — masked blocks never enter the grid (the GPU
+  baseline merely idles on them; on TPU they are entirely absent, which is where the
+  causal-schedule throughput win materializes intra-chip).
+* Paper §3.1's constraint — "all operations for a given KV tile must run
+  contiguously on a single SM" so dK/dV stay register-resident — becomes: tasks
+  with the same ``kv`` are adjacent in the serialized order, so the dK/dV output
+  block index is unchanged across the chain and Pallas keeps the accumulator
+  VMEM-resident, flushing to HBM exactly once per chain (verified by the
+  no-refetch revisiting semantics of Pallas TPU output pipelining).
+* The deterministic ordered dQ global reduction (Alg. 1 lines 30–36, the paper's
+  serialized "reduction phase" of cost r) is an **explicit** DMA read-modify-write
+  of the fp32 dQ HBM buffer through VMEM scratch with semaphore waits. Explicit
+  DMAs make the accumulation order exactly the schedule order — bitwise
+  reproducible — with no reliance on implicit revisit pipelining (which could race
+  at distance ≤ 2 under double buffering). The first visit to each dQ block skips
+  the read (statically known from the schedule: ``q_first[t]``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedules import Schedule
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# schedule serialization
+# --------------------------------------------------------------------------- #
+def serialize_schedule(schedule: Schedule, head: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Serialized (kv_ids, q_ids) for one head of the schedule.
+
+    Worker chains are concatenated (the sequential TPU core plays all workers in
+    turn); within-chain order and chain order are preserved, so the dQ accumulation
+    order is a pure function of the schedule — the determinism contract.
+    """
+    kv_ids, q_ids = [], []
+    for chain in schedule.chains:
+        for (h, kv, q) in chain:
+            if h == head:
+                kv_ids.append(kv)
+                q_ids.append(q)
+    return np.asarray(kv_ids, np.int32), np.asarray(q_ids, np.int32)
+
+
+def first_visit_flags(kv_ids: np.ndarray, q_ids: np.ndarray) -> np.ndarray:
+    """q_first[t] = 1 iff task t is the first in serialized order touching q_ids[t]."""
+    seen = set()
+    flags = np.zeros_like(q_ids)
+    for t, q in enumerate(q_ids):
+        if int(q) not in seen:
+            flags[t] = 1
+            seen.add(int(q))
+    return flags.astype(np.int32)
+
+
+# --------------------------------------------------------------------------- #
+# kernel body
+# --------------------------------------------------------------------------- #
+def _bwd_kernel(kv_ids, q_ids, q_first,        # scalar prefetch (SMEM)
+                q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dq_hbm, dk_ref, dv_ref,
+                dq_scratch, sem_in, sem_out,
+                *, sm_scale, causal, block_q, block_k):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    kv = kv_ids[t]
+    qi = q_ids[t]
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)        # (bq, d)
+    lse = lse_ref[0]                          # (bq,)
+    delta = delta_ref[0]                      # (bq,)
+
+    # ---- compute phase (cost c in the DAG model) ----
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                                   # (bq, bk)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (bq, bk)
+    ds = p * (dp - delta[:, None]) * sm_scale
+
+    # ---- dV/dK: chain-contiguous accumulation; block stays VMEM-resident ----
+    first_of_chain = jnp.logical_or(t == 0, kv_ids[jnp.maximum(t - 1, 0)] != kv)
+    dv_contrib = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    dk_contrib = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(first_of_chain)
+    def _init():
+        dv_ref[0] = dv_contrib
+        dk_ref[0] = dk_contrib
+
+    @pl.when(jnp.logical_not(first_of_chain))
+    def _acc():
+        dv_ref[0] += dv_contrib
+        dk_ref[0] += dk_contrib
+
+    # ---- dQ: ordered deterministic global reduction (Alg. 1 l.30–36) ----
+    # reduction phase (cost r in the DAG model): explicit HBM<->VMEM RMW, order =
+    # serialized schedule order. Semaphore waits pin the order; no implicit
+    # pipelining is involved, so no stale-buffer hazards regardless of schedule.
+    dq_contrib = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    dq_slice = dq_hbm.at[b, pl.ds(qi * block_q, block_q), :]
+
+    @pl.when(q_first[t] == 1)
+    def _fresh():
+        dq_scratch[...] = dq_contrib
+
+    @pl.when(q_first[t] == 0)
+    def _rmw():
+        cp_in = pltpu.make_async_copy(dq_slice, dq_scratch, sem_in)
+        cp_in.start()
+        cp_in.wait()
+        dq_scratch[...] += dq_contrib
+
+    cp_out = pltpu.make_async_copy(dq_scratch, dq_slice, sem_out)
+    cp_out.start()
+    cp_out.wait()
+
+
+# --------------------------------------------------------------------------- #
+# host wrapper
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
+                                             "block_k", "interpret"))
+def _flash_bwd_call(q, k, v, do, lse, delta, kv_ids, q_ids, q_first, causal,
+                    sm_scale, block_q, block_k, interpret):
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    n_tasks = int(kv_ids.shape[0])
+    grid = (bh, n_tasks)
+    kernel = functools.partial(
+        _bwd_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        block_k=block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, t, kvi, qi, qf: (b, qi[t], 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, t, kvi, qi, qf: (b, kvi[t], 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, t, kvi, qi, qf: (b, kvi[t], 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, t, kvi, qi, qf: (b, qi[t], 0)),
+            pl.BlockSpec((1, block_q), lambda b, t, kvi, qi, qf: (b, qi[t])),
+            pl.BlockSpec((1, block_q), lambda b, t, kvi, qi, qf: (b, qi[t])),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # dq: explicit DMA RMW
+            pl.BlockSpec((1, block_k, d), lambda b, t, kvi, qi, qf: (b, kvi[t], 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, t, kvi, qi, qf: (b, kvi[t], 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sk, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sk, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_ids, q_ids, q_first, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+def flash_bwd(q, k, v, out, lse, do, schedule: Schedule, causal=False,
+              sm_scale=None, block_q=128, block_k=128, interpret=False):
+    """DASH backward. Shapes (BH, S, D); the schedule's (n_kv, n_q) must match
+    (S // block_k, S // block_q). Returns dq, dk, dv (fp32)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if causal:
+        assert block_q == block_k, "causal schedules assume square tiles"
+    assert schedule.causal == causal
+    assert schedule.n_kv == sk // block_k and schedule.n_q == sq // block_q, (
+        f"schedule ({schedule.n_kv}x{schedule.n_q}) != tiling "
+        f"({sk // block_k}x{sq // block_q})")
+    kv_ids, q_ids = serialize_schedule(schedule)
+    q_first = first_visit_flags(kv_ids, q_ids)
+    # D = rowsum(dO ∘ O)  (Alg. 1 line 1 — preprocessing)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    return _flash_bwd_call(q, k, v, do, lse, delta,
+                           jnp.asarray(kv_ids), jnp.asarray(q_ids),
+                           jnp.asarray(q_first),
+                           causal, sm_scale, block_q, block_k, interpret)

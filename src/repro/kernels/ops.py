@@ -1,0 +1,155 @@
+"""Public attention op: jit'd custom_vjp wrapper around the DASH kernels.
+
+``dash_attention(q, k, v, causal=..., schedule=...)`` runs the Pallas forward and
+the schedule-driven deterministic Pallas backward.  ``attention(..., impl=...)``
+is the model-facing dispatcher:
+
+  impl="xla"     — reference jnp attention (used by model code on CPU, in smoke
+                   tests and in the multi-pod dry-run, where a custom kernel would
+                   obscure cost_analysis and explode CPU compile times);
+  impl="pallas"  — the DASH kernels (TARGET: TPU; validated via interpret=True).
+
+Public shapes are (batch, heads, seq, head_dim); GQA is handled by repeating KV
+heads up to the query head count before the kernel (TPU kernels see (B·H, S, D)).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import Schedule, make_schedule
+from repro.kernels import ref as ref_mod
+from repro.kernels.flash_bwd import flash_bwd
+from repro.kernels.flash_fwd import flash_fwd
+
+
+def _flatten(x):  # (B, H, S, D) -> (BH, S, D)
+    b, h, s, d = x.shape
+    return x.reshape(b * h, s, d)
+
+
+def _unflatten(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _dash_attention(q, k, v, causal, schedule_name, sm_scale, block, interpret):
+    out, _ = _fwd_impl(q, k, v, causal, sm_scale, block, interpret)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, sm_scale, block, interpret):
+    return flash_fwd(q, k, v, causal=causal, sm_scale=sm_scale,
+                     block_q=block, block_k=block, interpret=interpret)
+
+
+def _fwd_rule(q, k, v, causal, schedule_name, sm_scale, block, interpret):
+    out, lse = _fwd_impl(q, k, v, causal, sm_scale, block, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(causal, schedule_name, sm_scale, block, interpret, res, do):
+    q, k, v, out, lse = res
+    n = q.shape[1] // block
+    schedule = make_schedule(schedule_name, n, n_heads=1, causal=causal)
+    dq, dk, dv = flash_bwd(q, k, v, out, lse, do, schedule, causal=causal,
+                           sm_scale=sm_scale, block_q=block, block_k=block,
+                           interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_dash_attention.defvjp(_fwd_rule, _bwd_rule)
+
+
+def dash_attention(q, k, v, causal: bool = False,
+                   schedule: str = "symmetric_shift_or_shift",
+                   sm_scale: Optional[float] = None, block: int = 128,
+                   interpret: bool = False):
+    """DASH attention with deterministic scheduled backward.
+
+    Args:
+      q, k, v: (B, H, S, D) (kv heads may be fewer — repeated for GQA).
+      causal: mask.
+      schedule: "fa3" | "descending" | "shift" | "symmetric_shift" |
+        "symmetric_shift_or_shift" (pick the paper-optimal one for the mask).
+      block: square tile size (MXU-aligned; 128 default).
+    Returns: (B, H, S, D) attention output.
+    """
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    if hk != h:
+        assert h % hk == 0
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if schedule == "symmetric_shift_or_shift":
+        schedule = "symmetric_shift" if causal else "shift"
+    out = _dash_attention(_flatten(q), _flatten(k), _flatten(v), causal,
+                          schedule, sm_scale, block, interpret)
+    return _unflatten(out, b, h)
+
+
+def xla_attention(q, k, v, causal: bool = False, sm_scale: Optional[float] = None,
+                  chunk_q: Optional[int] = None):
+    """Reference jnp attention (B, H, S, D) — differentiable, deterministic on TPU.
+
+    ``chunk_q``: scan over query chunks so the (B,H,S,S) score matrix is never
+    materialized — peak temp drops from O(S²) to O(S·chunk). Identical math and
+    FLOPs; required for the 4k–32k training/prefill cells to fit HBM.
+    """
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    if hk != h:
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if not chunk_q or s <= chunk_q or s % chunk_q:
+        out, _ = ref_mod.mha_fwd(_flatten(q), _flatten(k), _flatten(v), causal,
+                                 sm_scale)
+        return _unflatten(out, b, h)
+
+    nc = s // chunk_q
+    qc = q.reshape(b, h, nc, chunk_q, d).transpose(2, 0, 1, 3, 4)
+    offsets = jnp.arange(nc) * chunk_q
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    kpos = jnp.arange(s)
+
+    def one_chunk(carry, qc_off):
+        qch, off = qc_off
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qch.astype(jnp.float32),
+                            kf) * sm_scale
+        if causal:
+            qpos = off + jnp.arange(chunk_q)
+            logits = jnp.where((qpos[:, None] >= kpos[None, :])[None, None],
+                               logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+        return carry, o.astype(q.dtype)
+
+    # remat per chunk: the backward recomputes one chunk's scores at a time
+    # instead of saving every chunk's f32 logits/mask across the scan.
+    # unroll: keeps every chunk visible to cost_analysis (a rolled loop is
+    # counted once) and lets the TPU scheduler software-pipeline the chunks.
+    _, out = jax.lax.scan(jax.checkpoint(one_chunk), (), (qc, offsets),
+                          unroll=True)
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, h, s, d)
+
+
+def attention(q, k, v, causal: bool = False, impl: str = "xla",
+              schedule: str = "symmetric_shift_or_shift",
+              sm_scale: Optional[float] = None, interpret: bool = False,
+              chunk_q: Optional[int] = None):
+    """Model-facing dispatcher; see module docstring."""
+    if impl == "xla":
+        return xla_attention(q, k, v, causal, sm_scale, chunk_q=chunk_q)
+    if impl == "pallas":
+        return dash_attention(q, k, v, causal, schedule, sm_scale,
+                              interpret=interpret)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the DASH attention kernels.
+
+All math in fp32 regardless of input dtype (the kernels accumulate in fp32 too).
+``mha_fwd`` returns (out, lse); ``mha_bwd`` implements Algorithm 1's formulas
+(paper Appendix C) without tiling; ``vjp_oracle`` cross-checks via jax.vjp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _logits(q, k, sm_scale):
+    return jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32)) * sm_scale
+
+
+def _mask(logits, causal):
+    if not causal:
+        return logits
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    msk = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+    return jnp.where(msk, logits, -jnp.inf)
+
+
+def mha_fwd(q, k, v, causal=False, sm_scale=None):
+    """Reference attention forward.
+
+    Args:  q, k, v: (BH, S, D) arrays (batch*heads flattened).
+    Returns: out (BH, S, D) in q.dtype, lse (BH, S) fp32.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = _mask(_logits(q, k, sm_scale), causal)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+def mha_bwd(q, k, v, out, lse, do, causal=False, sm_scale=None):
+    """Reference backward (Algorithm 1 math, untiled).
+
+    Returns dq, dk, dv in fp32.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    dof, outf = do.astype(jnp.float32), out.astype(jnp.float32)
+    s = _mask(_logits(q, k, sm_scale), causal)
+    p = jnp.exp(s - lse[..., None])                      # (BH, Sq, Sk)
+    dv = jnp.einsum("bqk,bqd->bkd", p, dof)
+    dp = jnp.einsum("bqd,bkd->bqk", dof, vf)
+    delta = jnp.sum(dof * outf, axis=-1)                 # D = rowsum(dO ∘ O)
+    ds = p * (dp - delta[..., None]) * sm_scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, kf)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, qf)
+    return dq, dk, dv
+
+
+def vjp_oracle(q, k, v, do, causal=False, sm_scale=None):
+    """dq, dk, dv via jax.vjp on the plain softmax attention (independent path)."""
+    def f(q_, k_, v_):
+        out, _ = mha_fwd(q_, k_, v_, causal, sm_scale)
+        return out.astype(jnp.float32)
+    _, pull = jax.vjp(f, q.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32))
+    return pull(do.astype(jnp.float32))

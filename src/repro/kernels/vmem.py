@@ -1,0 +1,78 @@
+"""VMEM working-set accounting for the DASH kernels (TPU v5e: ~16 MiB VMEM per
+core; Pallas double-buffers every blocked operand).
+
+BlockSpec shapes determine the footprint the kernel claims; this module makes
+that arithmetic explicit so block sizes are chosen — not guessed — and tests
+assert the budget (structural reasoning per the dry-run profiling methodology:
+no wall-clock on this host, so the IR/footprint is the profile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+VMEM_BYTES = 16 * 1024 * 1024
+# Pallas double-buffers every blocked operand (fetch t+1 during compute t)
+PIPELINE_FACTOR = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    buffers: Dict[str, int]
+
+    @property
+    def total(self) -> int:
+        return sum(self.buffers.values())
+
+    @property
+    def fraction(self) -> float:
+        return self.total / VMEM_BYTES
+
+    def fits(self, budget: float = 0.8) -> bool:
+        return self.fraction <= budget
+
+
+def fwd_footprint(block_q: int, block_k: int, d: int,
+                  in_dtype_bytes: int = 2) -> KernelFootprint:
+    """flash_fwd: q/k/v blocks double-buffered + fp32 scratch (acc, m, l) +
+    output block."""
+    return KernelFootprint({
+        "q": PIPELINE_FACTOR * block_q * d * in_dtype_bytes,
+        "k": PIPELINE_FACTOR * block_k * d * in_dtype_bytes,
+        "v": PIPELINE_FACTOR * block_k * d * in_dtype_bytes,
+        "o": PIPELINE_FACTOR * block_q * d * in_dtype_bytes,
+        "lse": PIPELINE_FACTOR * block_q * 4,
+        "acc": block_q * d * 4,
+        "m": block_q * 4,
+        "l": block_q * 4,
+        # transient score tile (bq × bk) f32 lives in VREG/VMEM during compute
+        "scores": block_q * block_k * 4,
+    })
+
+
+def bwd_footprint(block_q: int, block_k: int, d: int,
+                  in_dtype_bytes: int = 2) -> KernelFootprint:
+    """flash_bwd: q/do/lse/delta + k/v blocks, dk/dv output accumulators (fp32,
+    VMEM-resident across the contiguous KV chain), dq RMW scratch, score tiles."""
+    return KernelFootprint({
+        "q": PIPELINE_FACTOR * block_q * d * in_dtype_bytes,
+        "do": PIPELINE_FACTOR * block_q * d * in_dtype_bytes,
+        "k": PIPELINE_FACTOR * block_k * d * in_dtype_bytes,
+        "v": PIPELINE_FACTOR * block_k * d * in_dtype_bytes,
+        "lse": PIPELINE_FACTOR * block_q * 4,
+        "delta": PIPELINE_FACTOR * block_q * 4,
+        "dk_acc": block_k * d * 4,
+        "dv_acc": block_k * d * 4,
+        "dq_scratch": block_q * d * 4,
+        "p/ds tiles": 2 * block_q * block_k * 4,
+    })
+
+
+def best_block(d: int, causal: bool, budget: float = 0.5) -> int:
+    """Largest MXU-aligned square block whose bwd footprint fits the budget.
+    Larger blocks amortize the per-task dQ RMW (the paper's r) over more compute
+    (c) — directly lowering the simulated r/c and the schedule's bubble cost."""
+    for b in (512, 256, 128):
+        if bwd_footprint(b, b, d).fraction <= budget:
+            return b
+    return 128

@@ -1,0 +1,74 @@
+"""Straggler / hang detection for the training loop (1000+ node posture).
+
+At pod scale, synchronous SPMD steps make one slow host everyone's problem. The
+monitor tracks a robust step-time baseline (EMA + MAD) and classifies each step:
+  ok        within tolerance,
+  straggler step_time > straggler_factor × baseline  (log + counter → the
+            operator/controller swaps in a spare and triggers the elastic
+            restore path, ckpt/checkpoint.py),
+  hang      no step completion within hang_timeout    (watchdog thread →
+            configurable callback, default SIGABRT-style hard exit so the
+            scheduler reschedules; the bitwise-restore contract makes this safe).
+
+Single-process-testable: the classification logic is pure; the watchdog is a
+daemon thread. Used by launch/train.py when --heartbeat is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class HeartbeatConfig:
+    straggler_factor: float = 3.0
+    hang_timeout_s: float = 600.0
+    warmup_steps: int = 3
+    ema: float = 0.9
+
+
+class Monitor:
+    def __init__(self, cfg: HeartbeatConfig = HeartbeatConfig(),
+                 on_hang: Optional[Callable[[], None]] = None):
+        self.cfg = cfg
+        self.baseline: Optional[float] = None
+        self.steps = 0
+        self.stragglers = 0
+        self._last_beat = time.monotonic()
+        self._on_hang = on_hang
+        self._stop = threading.Event()
+        self._watchdog: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- step path
+    def step(self, step_time_s: float) -> str:
+        """Record a completed step; returns 'ok' | 'straggler'."""
+        self._last_beat = time.monotonic()
+        self.steps += 1
+        if self.steps <= self.cfg.warmup_steps or self.baseline is None:
+            self.baseline = step_time_s if self.baseline is None else (
+                self.cfg.ema * self.baseline + (1 - self.cfg.ema) * step_time_s)
+            return "ok"
+        verdict = "ok"
+        if step_time_s > self.cfg.straggler_factor * self.baseline:
+            self.stragglers += 1
+            verdict = "straggler"
+        else:  # only fold non-outliers into the baseline (robustness)
+            self.baseline = (self.cfg.ema * self.baseline
+                             + (1 - self.cfg.ema) * step_time_s)
+        return verdict
+
+    # ------------------------------------------------------------- watchdog
+    def start_watchdog(self):
+        def run():
+            while not self._stop.wait(min(5.0, self.cfg.hang_timeout_s / 4)):
+                if time.monotonic() - self._last_beat > self.cfg.hang_timeout_s:
+                    if self._on_hang:
+                        self._on_hang()
+                    return
+        self._watchdog = threading.Thread(target=run, daemon=True)
+        self._watchdog.start()
+
+    def stop(self):
+        self._stop.set()

@@ -1,0 +1,22 @@
+"""Production mesh builders (spec: MULTI-POD DRY-RUN step 1).
+
+A function — never a module-level constant — so importing never touches jax
+device state (the dry-run pins the placeholder device count before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per v5e pod; the multi-pod mesh stacks 2 pods (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False):
+    """Small mesh for in-test lowering on forced-multi-device CPU."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,54 @@
+"""Compute total/active parameter counts per full architecture (no allocation —
+eval_shape) and write experiments/param_counts.json for the roofline's
+MODEL_FLOPS = 6·N(_active)·D accounting."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer as T
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "param_counts.json")
+
+
+def counts_for(cfg):
+    defs_sds = jax.eval_shape(lambda: T.init(cfg, jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(defs_sds)[0]
+    total = 0
+    expert = 0
+    embed = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "/moe/" in f"/{keys}/" and ("w_up" in keys or "w_down" in keys
+                                       or "w_gate" in keys):
+            expert += n
+        if "embed" in keys or "lm_head" in keys or "pos_embed" in keys:
+            embed += n
+    active = total
+    if cfg.n_experts and cfg.top_k:
+        active = total - expert * (1 - cfg.top_k / cfg.n_experts)
+    # FLOPs accounting conventionally excludes embedding lookups (not matmuls);
+    # the lm_head matmul IS compute — keep it. Exclude only the token embed.
+    return {"total": int(total), "active": int(active),
+            "expert": int(expert), "embed_ish": int(embed)}
+
+
+def main():
+    out = {}
+    for mod in registry.ARCHS:
+        cfg = registry.get(mod)
+        out[cfg.name] = counts_for(cfg)
+        print(cfg.name, out[cfg.name])
+    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+    json.dump(out, open(OUT, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Input builders for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (no allocation) for
+the dry-run; ``make_batch(cfg, shape, key)`` returns real arrays of the same
+structure for smoke tests / examples. Modality frontends are STUBS per the
+assignment: VLM cells get precomputed patch embeddings, audio cells get
+precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+
+
+def _structure(cfg: ModelConfig, shape: InputShape):
+    """(batch_inputs, decode_extras) as (shape, dtype) declarations."""
+    b, s = shape.batch, shape.seq
+    d: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
+    s_text = s
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        # decode consumes the prompt's vision tokens from the cache
+        s_text = s - cfg.frontend_len
+        d["vision_embeds"] = ((b, cfg.frontend_len, cfg.frontend_dim), cfg.dtype)
+    if cfg.encoder is not None and shape.kind != "decode":
+        # decode attends to the encoder output via the cross_x input instead
+        d["frames"] = ((b, cfg.encoder.frontend_len, cfg.encoder.frontend_dim),
+                       cfg.dtype)
+    if shape.kind == "train":
+        d["tokens"] = ((b, s_text), jnp.int32)
+        d["labels"] = ((b, s_text), jnp.int32)
+    elif shape.kind == "prefill":
+        d["tokens"] = ((b, s_text), jnp.int32)
+    else:  # decode: one new token against a seq-long cache
+        d["tokens"] = ((b, 1), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct pytree for jit(...).lower(**specs)."""
+    batch = {k: jax.ShapeDtypeStruct(shp, dt)
+             for k, (shp, dt) in _structure(cfg, shape).items()}
+    out: Dict[str, Any] = {"batch": batch}
+    if shape.kind == "decode":
+        out["caches"] = jax.eval_shape(
+            functools.partial(T.init_cache, cfg, shape.batch, shape.seq))
+        out["cache_pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        if cfg.encoder is not None:
+            out["cross_x"] = jax.ShapeDtypeStruct(
+                (shape.batch, cfg.encoder.frontend_len, cfg.d_model), cfg.dtype)
+    return out
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key):
+    """Concrete random inputs matching input_specs (smoke tests, examples)."""
+    ks = jax.random.split(key, 8)
+    batch = {}
+    for i, (k, (shp, dt)) in enumerate(_structure(cfg, shape).items()):
+        if dt == jnp.int32:
+            batch[k] = jax.random.randint(ks[i], shp, 0, cfg.vocab, jnp.int32)
+        else:
+            batch[k] = jax.random.normal(ks[i], shp, jnp.float32).astype(dt)
+    out: Dict[str, Any] = {"batch": batch}
+    if shape.kind == "decode":
+        out["caches"] = T.init_cache(cfg, shape.batch, shape.seq)
+        out["cache_pos"] = jnp.asarray(shape.seq - 1, jnp.int32)
+        if cfg.encoder is not None:
+            out["cross_x"] = jax.random.normal(
+                ks[7], (shape.batch, cfg.encoder.frontend_len, cfg.d_model),
+                jnp.float32).astype(cfg.dtype)
+    return out

@@ -1,0 +1,227 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (train + cached decode +
+cross), MLP variants. Pure functions over ParamDef-declared pytrees.
+
+All matmuls run with fp32 accumulation (`preferred_element_type`); activations are
+annotated with logical sharding axes via :func:`repro.dist.sharding.shard` so the
+same model code lowers correctly under every rule set (TP / FSDP+TP / CP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.kernels.ops import attention as attention_op
+from repro.models.module import ParamDef as PD
+
+F32 = jnp.float32
+
+
+def dot(x, w, out_dtype=None):
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=out_dtype or F32)
+
+
+# ----------------------------------------------------------------- norms
+def norm_defs(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": PD((d,), (None,), "ones", F32),
+                "bias": PD((d,), (None,), "zeros", F32)}
+    return {"scale": PD((d,), (None,), "ones", F32)}
+
+
+def apply_norm(p, x, cfg, eps=1e-5):
+    xf = x.astype(F32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:            # rmsnorm
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float, pct: float = 1.0):
+    """Rotary embedding on the leading `pct` fraction of head_dim.
+    x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    dr = int(d * pct)
+    if dr == 0:
+        return x
+    dr -= dr % 2
+    xr, xp = x[..., :dr], x[..., dr:]
+    half = dr // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None, None] * freqs        # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+
+# ----------------------------------------------------------------- attention
+def attn_defs(cfg, cross: bool = False):
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    heads_ax = "heads" if cfg.shard_heads else None
+    kv_ax = "kv" if cfg.shard_kv else None
+    p = {
+        "wq": PD((d, h * hd), ("embed", heads_ax)),
+        "wk": PD((d, hk * hd), ("embed", kv_ax)),
+        "wv": PD((d, hk * hd), ("embed", kv_ax)),
+        "wo": PD((h * hd, d), (heads_ax, "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PD((h * hd,), (heads_ax,), "zeros")
+        p["bk"] = PD((hk * hd,), (kv_ax,), "zeros")
+        p["bv"] = PD((hk * hd,), (kv_ax,), "zeros")
+    return p
+
+
+def _project_qkv(p, xq, xkv, cfg, q_pos, kv_pos, use_rope=True):
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dot(xq, p["wq"])
+    k = dot(xkv, p["wk"])
+    v = dot(xkv, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(xq.shape[:-1] + (h, hd)).astype(cfg.dtype)
+    k = k.reshape(xkv.shape[:-1] + (hk, hd)).astype(cfg.dtype)
+    v = v.reshape(xkv.shape[:-1] + (hk, hd)).astype(cfg.dtype)
+    if use_rope and cfg.rope_pct > 0:
+        q = rope(q, q_pos, cfg.rope_theta, cfg.rope_pct)
+        k = rope(k, kv_pos, cfg.rope_theta, cfg.rope_pct)
+    return q, k, v
+
+
+def _sdpa_full(q, k, v, cfg, causal):
+    """(B,S,H,D)x(B,S,Hk,D) -> (B,S,H,D); dispatches to the configured impl.
+
+    When the head count does not divide the model axis (shard_heads=False:
+    llama4's 40, internvl's 14, whisper's 8 heads on tp=16), attention compute
+    would replicate across all model ranks. Instead shard the *query sequence*
+    over the model axis (k/v gathered): scores/out are seq-sharded — sequence-
+    parallel attention, 16× less compute than replication at the cost of one
+    k/v all-gather per layer (EXPERIMENTS.md §Perf, llama4 hillclimb h2)."""
+    qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    seq_shard = not cfg.shard_heads and cfg.attn_seq_shard
+    if seq_shard:
+        qt = shard(qt, "batch", None, "seq_sp", None)
+        kt = shard(kt, "batch", None, None, None)
+        vt = shard(vt, "batch", None, None, None)
+    out = attention_op(qt, kt, vt, causal=causal, impl=cfg.attention_impl,
+                       schedule=cfg.dash_schedule, chunk_q=cfg.attn_chunk_q)
+    if seq_shard:
+        out = shard(out, "batch", None, "seq_sp", None)
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def _sdpa_decode(q, k_cache, v_cache, valid_len):
+    """One-step decode: q (B,1,H,D); caches (B,S,Hk,D); attends to [0, valid_len)."""
+    b, _, h, hd = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    qg = q.reshape(b, 1, hk, g, hd)
+    scores = jnp.einsum("bokgd,bskd->bkgs", qg.astype(F32),
+                        k_cache.astype(F32)) / math.sqrt(hd)
+    pos = jnp.arange(s)[None, None, None, :]
+    scores = jnp.where(pos < valid_len, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(F32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
+                    causal=True, cross_x=None, window=None):
+    """GQA attention. Modes:
+      train/prefill: cache=None → full (causal or not) self/cross attention.
+      decode:        cache=(k,v) (B,S,Hk,D), cache_pos scalar → 1-token step;
+                     returns updated cache.
+      window:        optional sliding-window size (attention-free beyond it).
+    Returns (y, new_cache).
+    """
+    b = x.shape[0]
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    xkv = cross_x if cross_x is not None else x
+    use_rope = cross_x is None
+    kv_positions = positions if cross_x is None else (
+        jnp.arange(xkv.shape[1])[None, :])
+
+    if cache is None:
+        q, k, v = _project_qkv(p, x, xkv, cfg, positions, kv_positions, use_rope)
+        q = shard(q, "batch", "seq", "act_heads", None)
+        out = _sdpa_full(q, k, v, cfg, causal and cross_x is None)
+        new_cache = None
+    else:
+        k_cache, v_cache = cache
+        q, k, v = _project_qkv(p, x, xkv, cfg, positions, kv_positions, use_rope)
+        if cross_x is None:  # self-attention: append to cache
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, cache_pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, cache_pos, 0, 0))
+        if x.shape[1] > 1:  # prefill-fill: full attention over the fresh k/v
+            out = _sdpa_full(q, k, v, cfg, causal and cross_x is None)
+        else:
+            out = _sdpa_decode(q, k_cache, v_cache, cache_pos + 1)
+        new_cache = (k_cache, v_cache)
+
+    out = out.reshape(x.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
+    # row-parallel product emitted in bf16: the TP partial-sum all-reduce then
+    # moves half the bytes (f32→bf16); MXU still accumulates f32 internally.
+    y = dot(out, p["wo"], out_dtype=x.dtype)
+    return shard(y, "batch", "seq", "act_embed"), new_cache
+
+
+# ----------------------------------------------------------------- MLP
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w_up": PD((d, f), ("embed", "mlp")),
+         "w_down": PD((f, d), ("mlp", "embed"), "scaled")}
+    if cfg.activation in ("silu", "geglu"):
+        p["w_gate"] = PD((d, f), ("embed", "mlp"))
+    return p
+
+
+def apply_mlp(p, x, cfg):
+    up = dot(x, p["w_up"])
+    if cfg.activation == "silu":
+        h = jax.nn.silu(dot(x, p["w_gate"])) * up
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(dot(x, p["w_gate"])) * up
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.activation == "relu2":           # Nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.activation)
+    h = shard(h.astype(x.dtype), "batch", "seq", "act_mlp")
+    return shard(dot(h, p["w_down"], out_dtype=x.dtype),
+                 "batch", "seq", "act_embed")  # bf16 row-parallel all-reduce
+
+
+# ----------------------------------------------------------------- embeddings
+def embed_defs(cfg):
+    return {"tok": PD((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"))}
+
+
+def apply_embed(p, tokens, cfg):
+    return shard(p["tok"].astype(cfg.dtype)[tokens],
+                 "batch", "seq", "act_embed")
+
+
+def lm_head_defs(cfg):
+    return {"w": PD((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))}
+
+
+def apply_lm_head(p, x, cfg):
+    return shard(dot(x, p["w"]), "batch", "seq", "vocab")

@@ -1,0 +1,130 @@
+"""Mamba selective-SSM block (for jamba-1.5 hybrid and standalone SSM configs).
+
+Train path: depthwise causal conv (explicit shift-adds) + chunked associative scan
+over time — ``lax.scan`` over chunks keeps the materialized (B, chunk, d_in, d_state)
+intermediate bounded (VMEM/HBM friendly at 4k–512k sequence lengths); the inner
+``associative_scan`` is the parallel prefix the TPU likes.  Decode path: O(1)
+recurrent step carrying (conv_state, ssm_state).
+
+Determinism note (DESIGN.md §Arch-applicability): the scan is a fixed-shape
+computation with a pinned association — deterministic by construction; DASH
+scheduling does not apply (no cross-tile dQ-style reduction exists).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.module import ParamDef as PD
+
+F32 = jnp.float32
+
+
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_in, dt_rank, cfg.ssm_state_dim, cfg.ssm_conv
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    d_in, dt_rank, d_state, k_conv = mamba_dims(cfg)
+    return {
+        "in_proj": PD((d, 2 * d_in), ("embed", "mlp")),
+        "conv_w": PD((k_conv, d_in), (None, "mlp"), "scaled"),
+        "conv_b": PD((d_in,), ("mlp",), "zeros"),
+        "x_proj": PD((d_in, dt_rank + 2 * d_state), ("mlp", None)),
+        "dt_w": PD((dt_rank, d_in), (None, "mlp")),
+        "dt_b": PD((d_in,), ("mlp",), "ones"),
+        "A_log": PD((d_in, d_state), ("mlp", "state"), "ones", F32),
+        "D": PD((d_in,), ("mlp",), "ones", F32),
+        "out_proj": PD((d_in, d), ("mlp", "embed"), "scaled"),
+    }
+
+
+def _causal_conv(x, w, b, k_conv, state=None):
+    """Depthwise causal conv via k shift-adds. x: (B,S,Din); w: (k,Din).
+    With `state` (B,k-1,Din): single/short-step decode continuation."""
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (k_conv - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = jnp.zeros_like(x, dtype=F32)
+    for i in range(k_conv):
+        y = y + x_ext[:, i:i + s, :].astype(F32) * w[i]
+    new_state = x_ext[:, -(k_conv - 1):, :]
+    return (y + b).astype(x.dtype), new_state
+
+
+def _ssm_scan_chunked(a, bx, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t along axis 1. a, bx: (B,S,Din,N). Returns
+    (h_all (B,S,Din,N), h_last)."""
+    b, s, din, n = a.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: single chunk for irregular lengths
+    nc = s // chunk
+    a_c = a.reshape(b, nc, chunk, din, n).swapaxes(0, 1)
+    bx_c = bx.reshape(b, nc, chunk, din, n).swapaxes(0, 1)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def step(h, ab):
+        ac, bc = ab                                   # (B,chunk,Din,N)
+        A, Bv = jax.lax.associative_scan(op, (ac, bc), axis=1)
+        h_all = Bv + A * h[:, None]                   # fold in carry
+        return h_all[:, -1], h_all
+
+    h_last, h_all = jax.lax.scan(step, h0, (a_c, bx_c))
+    h_all = h_all.swapaxes(0, 1).reshape(b, s, din, n)
+    return h_all, h_last
+
+
+def apply_mamba(p, x, cfg, *, state=None, chunk: int = 512):
+    """x: (B,S,D). state=None → train/prefill (returns final state too);
+    state=(conv_state, ssm_state) → stepwise decode. Returns (y, new_state)."""
+    d_in, dt_rank, d_state, k_conv = mamba_dims(cfg)
+    b, s, _ = x.shape
+    u = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x1, z = jnp.split(u, 2, axis=-1)
+    x1 = shard(x1, "batch", "seq", "act_mlp")
+
+    conv_state = state[0] if state is not None else None
+    ssm_state = state[1] if state is not None else jnp.zeros(
+        (b, d_in, d_state), F32)
+    x1, new_conv_state = _causal_conv(x1, p["conv_w"].astype(F32),
+                                      p["conv_b"].astype(F32), k_conv, conv_state)
+    x1 = jax.nn.silu(x1.astype(F32))
+
+    proj = jnp.einsum("bse,ec->bsc", x1.astype(x.dtype), p["x_proj"].astype(x.dtype))
+    dt_low, B_mat, C_mat = jnp.split(
+        proj.astype(F32), [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_low,
+                                    p["dt_w"].astype(F32)) + p["dt_b"])
+    A = -jnp.exp(p["A_log"])                                     # (Din, N)
+    a = jnp.exp(dt[..., None] * A)                               # (B,S,Din,N)
+    bx = (dt * x1)[..., None] * B_mat[:, :, None, :]             # (B,S,Din,N)
+
+    if s > 1:  # train / prefill: chunked parallel prefix (folds in the carry)
+        h_all, h_last = _ssm_scan_chunked(a, bx, ssm_state, chunk)
+    else:      # stepwise decode: sequential fold
+        def stp(h, ab):
+            ai, bi = ab
+            h = ai * h + bi
+            return h, h
+        h_last, h_seq = jax.lax.scan(stp, ssm_state,
+                                     (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+        h_all = h_seq.swapaxes(0, 1)
+    y = jnp.einsum("bsen,bsn->bse", h_all, C_mat) + p["D"] * x1
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    y = shard(y, "batch", "seq", "act_mlp")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return shard(out, "batch", "seq", "act_embed"), (new_conv_state, h_last)

@@ -1,0 +1,71 @@
+"""Minimal functional parameter system.
+
+Models are pure functions over nested-dict pytrees of arrays.  Parameters are
+declared as :class:`ParamDef` trees carrying shape, initializer and **logical
+sharding axes**; `init_tree` materializes arrays, `spec_tree` extracts the logical
+axes so :mod:`repro.dist.sharding` can map them to mesh `PartitionSpec`s under a
+rule set (TP-only, FSDP+TP, …).  This keeps a single source of truth for
+shape/init/sharding without a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled(=normal/sqrt(fan_in))
+    dtype: Any = None             # overrides the model dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(d: ParamDef, key, dtype, init_scale: float):
+    dt = d.dtype or dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * init_scale).astype(dt)
+    if d.init == "scaled":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        s = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, d.shape, jnp.float32) * s).astype(dt)
+    raise ValueError(d.init)
+
+
+def init_tree(defs, key, dtype=jnp.bfloat16, init_scale: float = 0.02):
+    """Materialize a ParamDef tree into arrays with per-leaf fold-in keys
+    (deterministic: independent of traversal order changes in dict insertion)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    arrays = []
+    for i, d in enumerate(leaves):
+        arrays.append(_init_one(d, jax.random.fold_in(key, i), dtype, init_scale))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def spec_tree(defs):
+    """Extract the logical-axes tree (same structure, tuples of logical names)."""
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stacked(defs, n_layers: int):
+    """Prepend a scan ('layers') axis to every ParamDef in the tree."""
+    def f(d: ParamDef):
+        return ParamDef((n_layers,) + d.shape, ("layers",) + d.axes, d.init, d.dtype)
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FFN with a deterministic router and EP sharding.
+
+Routing determinism (DESIGN.md §Arch-applicability): ``jax.lax.top_k`` breaks ties
+by lowest index — a fixed, data-only function. Dispatch uses the Mesh-TensorFlow
+one-hot einsum formulation with per-group capacity: tokens are grouped by the data
+shards, the dispatch tensor is sharded (groups→data, experts→model/EP) so its
+footprint stays local. The einsum dispatch burns extra FLOPs proportional to
+``tokens·E·C·d`` — visible in the roofline's MODEL_FLOPS/HLO ratio; the
+scatter-based alternative is a §Perf hillclimb (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.module import ParamDef as PD
+
+F32 = jnp.float32
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": PD((d, e), ("embed", None), "scaled", F32),
+        "w_up": PD((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": PD((e, f, d), ("experts", "mlp", "embed"), "scaled"),
+    }
+    if cfg.activation in ("silu", "geglu"):
+        p["w_gate"] = PD((e, d, f), ("experts", "embed", "mlp"))
+    return p
+
+
+def _act(h_gate, h_up, cfg):
+    if cfg.activation == "silu":
+        return jax.nn.silu(h_gate) * h_up
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(h_gate) * h_up
+    if cfg.activation == "relu2":
+        return jnp.square(jax.nn.relu(h_up))
+    return jax.nn.gelu(h_up)
+
+
+def apply_moe(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss).
+
+    Groups = batch dim (sharded over data); capacity per group
+    C = ceil(S · top_k / E · capacity_factor), rounded to 8 lanes.
+    With ``cfg.moe_groups > 1``: token-parallel sub-groups along the sequence
+    (sharded over (data, model)) — the one-hot/cumsum/einsum pipeline partitions
+    cleanly under SPMD (unlike sort/gather), so tokens stay seq-sharded and the
+    only model-axis collective is the expert all-to-all (GShard pattern).
+    """
+    b0, s0, d = x.shape
+    gpr = cfg.moe_groups
+    grouped = gpr > 1 and s0 % gpr == 0 and (s0 // gpr) * cfg.top_k >= cfg.n_experts
+    if grouped:
+        x = x.reshape(b0 * gpr, s0 // gpr, d)
+        x = shard(x, "moe_group", None, "act_embed")
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(s * k / e * cfg.capacity_factor)
+    cap = max(8, (cap + 7) // 8 * 8)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])  # fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # deterministic
+    if cfg.renorm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, k) within its expert queue, in (s, k) scan order —
+    # a pure function of the routing decisions → deterministic capacity drops.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=F32)                 # (b,s,k,e)
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, -1)                       # (b,s,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch (b,s,k,e,c) one-hot → combine weights; sharded (data, …, model, …)
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=F32) \
+        * keep[..., None]                                           # (b,s,k,c)
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, cap_oh)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, onehot, cap_oh)
+    grp_ax = "moe_group" if grouped else "batch"
+    dispatch = shard(dispatch, grp_ax, None, None, None)
+    combine = shard(combine, grp_ax, None, None, None)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(cfg.dtype), x)
+    # groups→experts exchange (all-to-all under token-parallel grouping)
+    xin = shard(xin, "experts", "batch" if not grouped else None, None,
+                "act_embed")
+    up = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"].astype(cfg.dtype))
+    if "w_gate" in p:
+        gate = jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"].astype(cfg.dtype))
+    else:
+        gate = up
+    h = _act(gate, up, cfg).astype(cfg.dtype)
+    h = shard(h, "experts", "batch", None, "act_mlp")
+    out = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"].astype(cfg.dtype))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(cfg.dtype), out)
+
+    # load-balancing aux loss (Switch-style), deterministic
+    me = jnp.mean(probs, axis=(0, 1))                   # mean router prob per expert
+    ce = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))      # top-1 assignment fraction
+    aux = e * jnp.sum(me * ce)
+    y = y.astype(x.dtype)
+    if grouped:
+        y = shard(y, "moe_group", None, "act_embed").reshape(b0, s0, d)
+        return shard(y, "batch", "seq_sp", "act_embed"), aux
+    return shard(y, "batch", "seq", "act_embed"), aux
+
+
+def apply_moe_gather(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Sort/gather ("megablocks-lite") dispatch — beyond-paper optimization.
+
+    The einsum dispatch pays ~4·s·E·C·d FLOPs and materializes a (b,s,e,c)
+    one-hot; this path replaces it with a stable argsort over expert ids and two
+    gathers (≈0 FLOPs, O(s·d) traffic). Determinism: ``jnp.argsort`` is stable
+    (ties by position), so capacity drops are the *same* deterministic set as the
+    einsum path — results match bitwise up to dot-product association.
+    See EXPERIMENTS.md §Perf (llama4/phi3.5 hillclimbs).
+
+    With ``cfg.moe_groups > 1`` the sequence is split into token-parallel dispatch
+    groups sharded over (data, model) — tokens never leave seq-sharded form
+    (GShard-style), so the MoE branch needs NO sequence all-gather/reduce-scatter;
+    the only model-axis collective is the expert all-to-all.
+    """
+    b0, s0, d = x.shape
+    gpr = cfg.moe_groups
+    if gpr > 1 and s0 % gpr == 0 and (s0 // gpr) * cfg.top_k >= cfg.n_experts:
+        x = x.reshape(b0 * gpr, s0 // gpr, d)
+        x = shard(x, "moe_group", None, "act_embed")
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(s * k / e * cfg.capacity_factor)
+    cap = max(8, (cap + 7) // 8 * 8)
+    sk = s * k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)       # deterministic tie-break
+    if cfg.renorm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    eid = gate_idx.reshape(b, sk)                       # (b, sk) expert of each slot
+    gates = gate_vals.reshape(b, sk)
+    order = jnp.argsort(eid, axis=1, stable=True)       # slots grouped by expert
+    inv = jnp.argsort(order, axis=1, stable=True)       # slot -> sorted position
+
+    counts = jnp.sum(jax.nn.one_hot(eid, e, dtype=jnp.int32), axis=1)  # (b, e)
+    starts = jnp.cumsum(counts, axis=1) - counts                        # exclusive
+
+    # ---- dispatch: expert_in[b, e, c] = x[token of c-th routed slot of e] ----
+    cpos = jnp.arange(cap)[None, None, :]
+    src_slot = jnp.clip(starts[:, :, None] + cpos, 0, sk - 1)          # (b,e,cap)
+    valid_in = cpos < counts[:, :, None]
+    tok_of_sorted = jnp.take_along_axis(order, src_slot.reshape(b, e * cap), 1)
+    tok_idx = tok_of_sorted // k                                       # (b, e*cap)
+    xin = jnp.take_along_axis(x, tok_idx[..., None], axis=1)           # (b,e*cap,d)
+    xin = xin.reshape(b, e, cap, d) * valid_in[..., None].astype(x.dtype)
+    xin = jnp.transpose(xin, (1, 0, 2, 3))                             # (e,b,cap,d)
+    # groups→experts exchange: with token-parallel groups this is the all-to-all
+    xin = shard(xin, "experts", "batch" if gpr == 1 else None, None, "act_embed")
+
+    up = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"].astype(cfg.dtype))
+    gate_h = (jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"].astype(cfg.dtype))
+              if "w_gate" in p else up)
+    h = _act(gate_h, up, cfg).astype(cfg.dtype)
+    h = shard(h, "experts", "batch", None, "act_mlp")
+    out = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"].astype(cfg.dtype))
+
+    # ---- combine: slot's output lives at (eid, rank) if rank < cap ----
+    rank = jnp.take_along_axis(inv, jnp.arange(sk)[None, :], 1) \
+        - jnp.take_along_axis(starts, eid, 1)                          # (b, sk)
+    keep = rank < cap
+    slot = jnp.clip(eid * cap + rank, 0, e * cap - 1)
+    out_flat = jnp.transpose(out, (1, 0, 2, 3)).reshape(b, e * cap, d)
+    y_slots = jnp.take_along_axis(out_flat, slot[..., None], axis=1)   # (b,sk,d)
+    y_slots = y_slots * (gates * keep)[..., None].astype(cfg.dtype)
+    y = jnp.sum(y_slots.reshape(b, s, k, d), axis=2)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, :, 0], e, dtype=F32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    y = y.astype(x.dtype)
+    if gpr > 1 and b != b0:
+        y = shard(y, "moe_group", None, "act_embed")
+        y = y.reshape(b0, s0, d)   # back to the seq-sharded residual layout
+        return shard(y, "batch", "seq_sp", "act_embed"), aux
+    return shard(y, "batch", "seq", "act_embed"), aux

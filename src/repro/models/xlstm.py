@@ -1,0 +1,154 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, sequential scan) — for the xlstm-350m config.
+
+mLSTM train path uses the paper's parallel quadratic form: a gate-decay matrix
+``D_ij = F_i - F_j + i_j`` (cumulative log-forget differences plus input gate)
+masks the q·k attention-like scores; decode path is the O(1) recurrence on the
+(C, n, m) state. sLSTM is inherently sequential (recurrent connections) and runs
+under ``lax.scan``; its state is (c, n, h, m) per head.
+
+DASH applicability: none (no softmax-attention KV reduction) — the arch runs with
+the determinism substrate only (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.module import ParamDef as PD
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_defs(cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    return {
+        "wq": PD((d, inner), ("embed", "heads")),
+        "wk": PD((d, inner), ("embed", "heads")),
+        "wv": PD((d, inner), ("embed", "heads")),
+        "w_i": PD((d, h), ("embed", None), "scaled"),
+        "w_f": PD((d, h), ("embed", None), "scaled"),
+        "b_i": PD((h,), (None,), "zeros", F32),
+        "b_f": PD((h,), (None,), "ones", F32),
+        "w_o": PD((inner, d), ("heads", "embed"), "scaled"),
+        "skip_gate": PD((d, inner), ("embed", "heads"), "scaled"),
+    }
+
+
+def apply_mlstm(p, x, cfg, *, state=None):
+    """x: (B,S,D). state=(C (B,H,hd,hd), n (B,H,hd), m (B,H)) for decode.
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = k / jnp.sqrt(jnp.asarray(hd, F32)).astype(k.dtype)
+    ig = (jnp.einsum("bsd,dh->bsh", x.astype(F32), p["w_i"]) + p["b_i"])  # log-space
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x.astype(F32), p["w_f"]) + p["b_f"])
+
+    if state is None:
+        # parallel form: D_ij = F_i - F_j + i_j (j<=i), F = cumsum(log f)
+        F = jnp.cumsum(fg, axis=1)                               # (B,S,H)
+        Dm = F[:, :, None, :] - F[:, None, :, :] + ig[:, None, :, :]
+        tri = jnp.tril(jnp.ones((s, s), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, NEG)           # (B,Si,Sj,H)
+        m = jnp.max(Dm, axis=2, keepdims=True)                   # row stabilizer
+        w = jnp.exp(Dm - m)                                      # (B,Si,Sj,H)
+        scores = jnp.einsum("bihe,bjhe->bijh", q.astype(F32), k.astype(F32)) * w
+        norm = jnp.maximum(jnp.abs(jnp.sum(scores, 2)), jnp.exp(-m[:, :, 0]))
+        out = jnp.einsum("bijh,bjhe->bihe", scores, v.astype(F32))
+        out = out / jnp.maximum(norm[..., None], 1e-6)
+        new_state = None
+    else:
+        C, n, m_prev = state
+
+        def step(carry, qkvif):
+            C, n, m_prev = carry
+            qt, kt, vt, it, ft = qkvif                           # (B,H,…)
+            m_new = jnp.maximum(ft + m_prev, it)
+            fi = jnp.exp(ft + m_prev - m_new)[..., None, None]
+            ii = jnp.exp(it - m_new)[..., None, None]
+            C = fi * C + ii * (vt[..., :, None] * kt[..., None, :])
+            n = fi[..., 0] * n + ii[..., 0] * kt
+            num = jnp.einsum("bhe,bhve->bhv", qt.astype(F32), C)
+            den = jnp.maximum(jnp.abs(jnp.sum(qt.astype(F32) * n, -1)),
+                              jnp.exp(-m_new))
+            return (C, n, m_new), num / den[..., None]
+
+        seq = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+               ig.swapaxes(0, 1), fg.swapaxes(0, 1))
+        new_state, out = jax.lax.scan(step, (C, n, m_prev), seq)
+        out = out.swapaxes(0, 1)                                 # (B,S,H,hd)
+
+    out = out.reshape(b, s, h * hd).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["skip_gate"].astype(x.dtype)))
+    y = jnp.einsum("bse,ed->bsd", out * gate, p["w_o"].astype(x.dtype))
+    return shard(y, "batch", "seq", "act_embed"), new_state
+
+
+def mlstm_init_state(cfg, batch):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return (jnp.zeros((batch, h, hd, hd), F32),
+            jnp.zeros((batch, h, hd), F32),
+            jnp.zeros((batch, h), F32))
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_defs(cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = PD((d, inner), ("embed", "heads"), "scaled")
+        gates[f"r_{g}"] = PD((h, hd, hd), (None, None, None), "scaled")
+        gates[f"b_{g}"] = PD((inner,), ("heads",), "zeros", F32)
+    gates["w_out"] = PD((inner, d), ("heads", "embed"), "scaled")
+    return gates
+
+
+def apply_slstm(p, x, cfg, *, state=None):
+    """Sequential sLSTM with exponential gating + stabilizer. x: (B,S,D).
+    state = (c, n, hprev, m) each (B,H,hd) except m (B,H,hd)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pre = {g: jnp.einsum("bsd,de->bse", x.astype(F32), p[f"w_{g}"].astype(F32))
+           .reshape(b, s, h, hd) + p[f"b_{g}"].reshape(h, hd)
+           for g in ("i", "f", "z", "o")}
+    if state is None:
+        state = slstm_init_state(cfg, b)
+
+    def step(carry, t_in):
+        c, n, hp, m = carry
+        zi, zf, zz, zo = t_in
+        ri = jnp.einsum("bhe,hev->bhv", hp, p["r_i"].astype(F32))
+        rf = jnp.einsum("bhe,hev->bhv", hp, p["r_f"].astype(F32))
+        rz = jnp.einsum("bhe,hev->bhv", hp, p["r_z"].astype(F32))
+        ro = jnp.einsum("bhe,hev->bhv", hp, p["r_o"].astype(F32))
+        it, ft = zi + ri, zf + rf
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zz + rz)
+        n = f_ * n + i_
+        hn = jax.nn.sigmoid(zo + ro) * c / jnp.maximum(n, 1e-6)
+        return (c, n, hn, m_new), hn
+
+    seq = tuple(pre[g].swapaxes(0, 1) for g in ("i", "f", "z", "o"))
+    new_state, out = jax.lax.scan(step, state, seq)
+    out = out.swapaxes(0, 1).reshape(b, s, h * hd)
+    y = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), p["w_out"].astype(x.dtype))
+    return shard(y, "batch", "seq", "act_embed"), new_state
+
+
+def slstm_init_state(cfg, batch):
+    h, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, h, hd), F32)
+    return (z, z, z, jnp.full((batch, h, hd), -1e30, F32))

@@ -1,0 +1,69 @@
+"""Batched generation engine: prefill + decode loop with deterministic sampling.
+
+Wraps the jitted prefill/decode step functions (the same ones the 32k/500k
+dry-run cells lower) with: greedy or temperature sampling (threefry-keyed —
+reproducible per (seed, step, batch row)), EOS early-exit masking, and an
+in-place ring of at most `max_seq` cache slots. Deterministic: identical
+(params, prompts, seed) → identical tokens, run to run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    temperature: float = 0.0      # 0 = greedy
+    top_k: int = 0                # 0 = no truncation
+    seed: int = 0
+    eos_id: Optional[int] = None
+
+
+def _sample(logits, scfg: SampleConfig, step_key):
+    """logits: (B, 1, V) → tokens (B, 1). Deterministic given step_key."""
+    logits = logits[:, 0].astype(jnp.float32)
+    if scfg.temperature == 0.0:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits = logits / scfg.temperature
+    if scfg.top_k:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(step_key, logits)[:, None].astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, cfg, params, max_seq: int, scfg: SampleConfig = SampleConfig()):
+        self.cfg, self.params, self.max_seq, self.scfg = cfg, params, max_seq, scfg
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill_step(p, b, cfg, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, c, t, pos, cx: T.decode_step(p, c, t, pos, cfg, cross_x=cx))
+
+    def generate(self, batch, n_tokens: int):
+        """batch: dict with 'tokens' (B, S_prompt) (+ frontend inputs).
+        Returns (B, n_tokens) int32, deterministic for a fixed seed."""
+        logits, caches, cross_x = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        tok = _sample(logits, self.scfg, jax.random.fold_in(key, 0))
+        prompt_len = batch["tokens"].shape[1]
+        if self.cfg.frontend == "vision":
+            prompt_len += self.cfg.frontend_len
+        out = [tok]
+        done = jnp.zeros((tok.shape[0], 1), bool)
+        for i in range(1, n_tokens):
+            if self.scfg.eos_id is not None:
+                done = done | (tok == self.scfg.eos_id)
+            logits, caches = self._decode(self.params, caches, tok,
+                                          jnp.asarray(prompt_len + i - 1), cross_x)
+            nxt = _sample(logits, self.scfg, jax.random.fold_in(key, i))
+            if self.scfg.eos_id is not None:
+                nxt = jnp.where(done, self.scfg.eos_id, nxt)
+            out.append(nxt)
+            tok = nxt
+        return jnp.concatenate(out, axis=1)

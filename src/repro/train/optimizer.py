@@ -1,0 +1,145 @@
+"""Optimizers (AdamW, Adafactor) + LR schedules — pure pytree implementations.
+
+State dtype is configurable: fp32 default; ``state_dtype='bfloat16'`` halves the
+optimizer footprint (needed to fit jamba-398B training on a single 256-chip v5e
+pod — see EXPERIMENTS.md §Dry-run). All updates are elementwise / fixed-order
+reductions ⇒ deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(F32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), gnorm
+
+
+# --------------------------------------------------------------------- AdamW
+def adamw_init(cfg: OptConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params, step):
+    dt = jnp.dtype(cfg.state_dtype)
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** (step.astype(F32) + 1)
+    bc2 = 1 - b2 ** (step.astype(F32) + 1)
+
+    def upd(g, m, v, p):
+        gf = g.astype(F32)
+        m_new = b1 * m.astype(F32) + (1 - b1) * gf
+        v_new = b2 * v.astype(F32) + (1 - b2) * jnp.square(gf)
+        mhat, vhat = m_new / bc1, v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m_new.astype(dt), v_new.astype(dt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                 "v": treedef.unflatten([o[2] for o in out])}
+    return new_p, new_state
+
+
+# ------------------------------------------------------------------ Adafactor
+def adafactor_init(cfg: OptConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def st(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], dt),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"f": jax.tree.map(st, params)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params, step):
+    dt = jnp.dtype(cfg.state_dtype)
+    lr = lr_at(cfg, step)
+    decay = 1.0 - (step.astype(F32) + 1.0) ** -0.8
+
+    def upd(g, s, p):
+        gf = jnp.square(g.astype(F32)) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * s["vr"].astype(F32) + (1 - decay) * jnp.mean(gf, -1)
+            vc = decay * s["vc"].astype(F32) + (1 - decay) * jnp.mean(gf, -2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, -1, keepdims=True), 1e-30)[..., None])
+            new_s = {"vr": vr.astype(dt), "vc": vc.astype(dt)}
+        else:
+            v = decay * s["v"].astype(F32) + (1 - decay) * gf
+            denom = v
+            new_s = {"v": v.astype(dt)}
+        delta = g.astype(F32) * jax.lax.rsqrt(denom + 1e-30)
+        # update clipping (Adafactor's RMS trick)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        delta = delta + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), new_s
+
+    is_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(jax.tree.map(lambda s: s, state["f"],
+                                                is_leaf=is_leaf))
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"f": treedef.unflatten([o[1] for o in out])})
+
+
+# ------------------------------------------------------------------ dispatch
+def opt_init(cfg: OptConfig, params):
+    return (adamw_init if cfg.name == "adamw" else adafactor_init)(cfg, params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params, step):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    fn = adamw_update if cfg.name == "adamw" else adafactor_update
+    new_p, new_s = fn(cfg, grads, state, params, step)
+    return new_p, new_s, gnorm

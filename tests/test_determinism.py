@@ -1,0 +1,85 @@
+"""Determinism substrate tests (paper §1/§2/Table 1 analogue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import determinism as det
+from repro.core import schedules as S
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _parts(seed, n=16, shape=(8, 4), dtype=jnp.float32, scale=1e4):
+    k = jax.random.PRNGKey(seed)
+    # wide dynamic range to excite non-associativity
+    mag = jax.random.uniform(k, (n,) + shape, minval=-scale, maxval=scale)
+    return mag.astype(dtype)
+
+
+def test_ordered_sum_bitwise_stable():
+    p = _parts(0)
+    a = det.ordered_sum(p)
+    b = det.ordered_sum(p)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_permuted_sum_deviates():
+    """Fig. 1 / Table 1: permuted (atomic-like) accumulation orders give different
+    bits; the deviation is O(eps * scale) but nonzero."""
+    p = _parts(1, n=64, scale=1e6).astype(jnp.float32)
+    rng = np.random.RandomState(0)
+
+    def run(i):
+        perm = rng.permutation(64) if i else np.arange(64)
+        return det.permuted_sum(p, perm)
+
+    dev = det.max_deviation(run, None, n_runs=10)
+    assert dev > 0.0                       # non-deterministic order => deviation
+    ordered_dev = det.max_deviation(lambda i: det.ordered_sum(p), None, 10)
+    assert ordered_dev == 0.0              # pinned order => bitwise identical
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 33), arity=st.sampled_from([2, 4]))
+def test_tree_sum_fixed_matches_fp64(n, arity):
+    p = _parts(2, n=n, shape=(4,), scale=10.0)
+    got = det.tree_sum_fixed(p, arity=arity)
+    want = jnp.sum(p.astype(jnp.float64), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    # determinism: same tree shape, same bits
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(det.tree_sum_fixed(p, arity=arity)))
+
+
+def test_schedule_ordered_dq_follows_schedule():
+    """The dQ accumulation order comes from the schedule's reduction_order; two
+    different schedules may give different bits, each individually reproducible."""
+    n = 8
+    p = _parts(3, n=n, shape=(16,), dtype=jnp.bfloat16, scale=100.0)
+    fa3_order = [kv for kv, _ in S.fa3(n, 1, causal=False).reduction_order[(0, 3)]]
+    shift_order = [kv for kv, _ in S.shift(n, 1).reduction_order[(0, 3)]]
+    a1 = det.schedule_ordered_dq(p, fa3_order)
+    a2 = det.schedule_ordered_dq(p, fa3_order)
+    b = det.schedule_ordered_dq(p, shift_order)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    # close numerically (same math), not necessarily identical bits. bf16 eps is
+    # ~0.8% of the +/-100 input scale, and cancellation makes *relative* output
+    # error unbounded — compare with an absolute tolerance scaled to the inputs.
+    np.testing.assert_allclose(np.asarray(a1, np.float32), np.asarray(b, np.float32),
+                               atol=8 * 0.008 * 100.0)
+
+
+def test_ring_ordered_psum_single_device():
+    """Association check on a 1D mesh of size 1 (CPU) — full multi-device variant
+    is exercised in test_dist_collectives.py under a forced 8-device platform."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    x = jnp.arange(4, dtype=jnp.float32)
+    f = shard_map(lambda v: det.ring_ordered_psum(v, "x"), mesh=mesh,
+                  in_specs=(jax.sharding.PartitionSpec("x"),),
+                  out_specs=jax.sharding.PartitionSpec())
+    # n=1: identity
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))

@@ -1,0 +1,29 @@
+"""Gantt renderer sanity: structure reflects the simulated timeline."""
+from repro.core import schedules as S
+from repro.core.gantt import compare, render
+from repro.core.simulator import simulate
+
+
+def test_render_shape_and_stalls():
+    sch = S.fa3(4, 1, causal=True)
+    out = render(sch, c=1.0, r=0.5, width=60)
+    lines = out.splitlines()
+    assert len(lines) == 5  # header + 4 workers
+    assert "fa3" in lines[0]
+    # causal fa3: later workers stall on their reduction turn (Fig. 3b bubble)
+    assert "-" in lines[-1]
+
+
+def test_render_symmetric_shift_no_stalls():
+    sch = S.symmetric_shift(4, 2)
+    res = simulate(sch, 1.0, 0.5)
+    out = render(sch, res, width=80)
+    # optimal schedule: zero bubbles — neither idle nor reduction stalls
+    body = "".join(line.split("|")[1] for line in out.splitlines()[1:])
+    assert "." not in body and "-" not in body
+
+
+def test_compare_contains_all_schedules():
+    out = compare(4, 2, causal=True)
+    for nm in ("fa3", "descending", "symmetric_shift"):
+        assert nm in out

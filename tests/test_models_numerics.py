@@ -1,0 +1,118 @@
+"""Numerics property tests for model substrates: parallel-form vs recurrent-form
+equivalence (mamba, mLSTM), chunked-scan invariance, RoPE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import mamba as M
+from repro.models import xlstm as X
+from repro.models.layers import rope
+from repro.models.module import init_tree
+
+CFG = registry.get("xlstm-350m").reduced()
+JCFG = registry.get("jamba-1.5-large-398b").reduced()
+
+
+# ------------------------------------------------------------------- mamba
+def test_mamba_chunked_scan_matches_sequential():
+    """The chunked associative scan must equal the step-by-step recurrence."""
+    a = jax.random.uniform(jax.random.PRNGKey(0), (2, 64, 8, 4), minval=0.1,
+                           maxval=0.99)
+    bx = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 8, 4))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 4))
+    for chunk in (8, 16, 64):
+        h_all, h_last = M._ssm_scan_chunked(a, bx, h0, chunk)
+        # sequential reference
+        h = h0
+        outs = []
+        for t in range(64):
+            h = a[:, t] * h + bx[:, t]
+            outs.append(h)
+        ref_all = jnp.stack(outs, 1)
+        np.testing.assert_allclose(np.asarray(h_all), np.asarray(ref_all),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref_all[:, -1]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_mamba_prefill_then_decode_matches_full():
+    """Processing [0:t) then stepping t..T one-by-one == full-sequence pass."""
+    cfg = JCFG
+    p = init_tree(M.mamba_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    y_full, _ = M.apply_mamba(p, x, cfg, chunk=8)
+
+    d_in, _, d_state, k_conv = M.mamba_dims(cfg)
+    conv0 = jnp.zeros((1, k_conv - 1, d_in))
+    ssm0 = jnp.zeros((1, d_in, d_state))
+    y_pre, state = M.apply_mamba(p, x[:, :24], cfg, state=(conv0, ssm0), chunk=8)
+    ys = [y_pre]
+    for t in range(24, 32):
+        y_t, state = M.apply_mamba(p, x[:, t:t + 1], cfg, state=state)
+        ys.append(y_t)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               atol=2e-4, rtol=2e-3)
+
+
+# ------------------------------------------------------------------- mLSTM
+def test_mlstm_parallel_matches_recurrent():
+    """The quadratic parallel form (train) and the (C, n, m) recurrence (decode)
+    are the same function — xLSTM's core identity."""
+    cfg = CFG
+    p = init_tree(X.mlstm_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.5
+    y_par, _ = X.apply_mlstm(p, x, cfg, state=None)
+    y_rec, _ = X.apply_mlstm(p, x, cfg, state=X.mlstm_init_state(cfg, 2))
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=2e-3, rtol=2e-2)
+
+
+def test_slstm_stepwise_consistency():
+    """Splitting the sequence across two scan calls with carried state matches
+    one full scan (the decode-cache contract)."""
+    cfg = CFG
+    p = init_tree(X.slstm_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model)) * 0.5
+    y_full, _ = X.apply_slstm(p, x, cfg, state=None)
+    y1, st = X.apply_slstm(p, x[:, :7], cfg, state=None)
+    y2, _ = X.apply_slstm(p, x[:, 7:], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               atol=1e-5, rtol=1e-4)
+
+
+# -------------------------------------------------------------------- RoPE
+@settings(max_examples=20, deadline=None)
+@given(pct=st.sampled_from([0.25, 0.5, 1.0]), seed=st.integers(0, 100))
+def test_rope_preserves_norm(pct, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 2, 64))
+    pos = jnp.arange(8)[None, :]
+    y = rope(x, pos, 10_000.0, pct)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """q·k after RoPE depends only on the position *difference*."""
+    d = 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def score(pq, pk):
+        qr = rope(q, jnp.asarray([[pq]]), 10_000.0, 1.0)
+        kr = rope(k, jnp.asarray([[pk]]), 10_000.0, 1.0)
+        return float(jnp.sum(qr * kr))
+
+    assert score(5, 3) == pytest.approx(score(12, 10), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_rope_zero_pct_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 32))
+    y = rope(x, jnp.arange(4)[None, :], 10_000.0, 0.0)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

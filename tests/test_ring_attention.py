@@ -1,0 +1,79 @@
+"""Ring attention (cross-device DASH) vs. reference, on a forced 8-device CPU
+platform — run in a subprocess so the 1-device main test process is unaffected."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+    from repro.dist.ring_attention import (ring_attention, zigzag_permutation,
+                                           zigzag_inverse)
+    from repro.kernels.ops import xla_attention
+
+    mesh = jax.make_mesh((8,), ("cp",))
+    B, S, H, D = 2, 512, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, D), jnp.float32) for i in range(3))
+    do = jax.random.normal(ks[3], (B, S, H, D), jnp.float32)
+
+    def ref(q_, k_, v_, causal):
+        qt = jnp.swapaxes(q_, 1, 2)
+        return jnp.swapaxes(xla_attention(qt, jnp.swapaxes(k_, 1, 2),
+                                          jnp.swapaxes(v_, 1, 2), causal), 1, 2)
+
+    # ---- full mask: contig layout == paper Shift Schedule across chips
+    f = jax.jit(lambda a, b, c: ring_attention(a, b, c, mesh, "cp", causal=False))
+    out = f(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref(q, k, v, False)),
+                               atol=2e-5, rtol=2e-5)
+    print("full-mask ring OK")
+
+    # ---- causal: zigzag layout == paper Symmetric Shift across chips
+    perm = zigzag_permutation(S, 8)
+    inv = zigzag_inverse(S, 8)
+    g = jax.jit(lambda a, b, c: ring_attention(a, b, c, mesh, "cp", causal=True))
+    out_z = g(q[:, perm], k[:, perm], v[:, perm])[:, inv]
+    np.testing.assert_allclose(np.asarray(out_z), np.asarray(ref(q, k, v, True)),
+                               atol=2e-5, rtol=2e-5)
+    print("causal zigzag ring OK")
+
+    # ---- gradients flow (autodiff through the scanned ring) + determinism
+    def loss(q_, k_, v_):
+        o = ring_attention(q_, k_, v_, mesh, "cp", causal=True)
+        return jnp.sum(o * do[:, perm])
+    lg = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+    g1 = lg(q[:, perm], k[:, perm], v[:, perm])
+    g2 = lg(q[:, perm], k[:, perm], v[:, perm])
+    for a, b in zip(g1, g2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    def loss_ref(q_, k_, v_):
+        return jnp.sum(ref(q_, k_, v_, True) * do)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for got, want in zip(g1, gr):
+        np.testing.assert_allclose(np.asarray(got[:, inv]), np.asarray(want),
+                                   atol=5e-4, rtol=5e-4)
+    print("ring grads OK (bitwise-deterministic, match reference)")
+
+    # ---- collective structure: ring uses collective-permute, not all-gather
+    txt = jax.jit(lambda a, b, c: ring_attention(a, b, c, mesh, "cp",
+                                                 causal=True)) \\
+        .lower(q[:, perm], k[:, perm], v[:, perm]).compile().as_text()
+    assert "collective-permute" in txt
+    print("HLO has collective-permute: OK")
+""")
+
+
+def test_ring_attention_multidevice():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    for line in ("full-mask ring OK", "causal zigzag ring OK",
+                 "ring grads OK (bitwise-deterministic, match reference)",
+                 "HLO has collective-permute: OK"):
+        assert line in r.stdout

@@ -1,0 +1,45 @@
+"""VMEM budget tests + block-size sweep for the DASH kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import make_schedule
+from repro.kernels import ref
+from repro.kernels.flash_bwd import flash_bwd
+from repro.kernels.flash_fwd import flash_fwd
+from repro.kernels.vmem import best_block, bwd_footprint, fwd_footprint
+
+
+@pytest.mark.parametrize("d", [64, 128, 160, 256])
+def test_default_blocks_fit_vmem(d):
+    assert fwd_footprint(128, 128, d).fits()
+    assert bwd_footprint(128, 128, d).fits()
+
+
+def test_footprint_discriminates_block_sizes():
+    """The footprint math must actually discriminate: monotone in block size,
+    and a 512² block at hd512 exceeds the 50% headroom (best_block backs off)."""
+    fr = [bwd_footprint(b, b, 128).fraction for b in (128, 256, 512)]
+    assert fr[0] < fr[1] < fr[2]
+    assert bwd_footprint(512, 512, 512).fraction > 0.5
+    assert best_block(512, causal=True) in (128, 256)
+    assert best_block(64, causal=True) == 512
+
+
+@pytest.mark.parametrize("block", [128, 256])
+def test_bwd_correct_across_block_sizes(block):
+    """The schedule adapts to the tile count; numerics must hold for any block."""
+    s, d = 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v, do = (jax.random.normal(kk, (1, s, d), jnp.float32) for kk in ks)
+    out, lse = flash_fwd(q, k, v, causal=True, block_q=block, block_k=block,
+                         interpret=True)
+    sch = make_schedule("symmetric_shift", s // block, 1, True)
+    dq, dk, dv = flash_bwd(q, k, v, out, lse, do, sch, causal=True,
+                           block_q=block, block_k=block, interpret=True)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, out, lse, do, causal=True)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(rdq), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(rdk), atol=2e-5,
+                               rtol=2e-5)
