@@ -5,6 +5,7 @@
   bench_e2e_block      Fig. 10 end-to-end transformer-block speedup
   bench_determinism    Table 1 gradient-deviation
   bench_roofline       §Roofline terms from the dry-run artifacts (ours)
+  bench_ring           cross-chip ring attention, contig vs zigzag (ours)
 """
 import importlib
 import sys
@@ -16,6 +17,7 @@ MODULES = [
     "benchmarks.bench_e2e_block",
     "benchmarks.bench_determinism",
     "benchmarks.bench_roofline",
+    "benchmarks.bench_ring",
 ]
 
 

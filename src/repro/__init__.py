@@ -6,3 +6,17 @@ models, dist, train, serve, data, ckpt, configs, launch. See README.md.
 """
 
 __version__ = "1.0.0"
+
+import os as _os
+
+# Forcing a host-platform device count is an explicit request to run on the
+# host (CPU) platform — e.g. the 8-device ring/pipeline tests and the
+# 512-device dry-run.  On machines that also carry an accelerator runtime
+# (libtpu), make that intent stick unless the caller pinned JAX_PLATFORMS
+# themselves; jax may already be imported, so go through config, not the env.
+if ("xla_force_host_platform_device_count"
+        in _os.environ.get("XLA_FLAGS", "")
+        and not _os.environ.get("JAX_PLATFORMS")):
+    import jax as _jax
+
+    _jax.config.update("jax_platforms", "cpu")

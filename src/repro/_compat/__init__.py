@@ -1,0 +1,2 @@
+"""Compatibility stand-ins for optional third-party deps (gated, never
+shadowing a real install — see the repo-root conftest.py)."""

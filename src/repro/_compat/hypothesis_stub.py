@@ -1,0 +1,91 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API the tests use.
+
+Only loaded when the real package is missing (see the repo-root conftest.py,
+which aliases ``sys.modules["hypothesis"]`` to this module).  Implements the
+subset the suite imports — ``given``, ``settings`` and the ``strategies``
+``integers`` / ``floats`` / ``booleans`` (+ ``.map``) — with a fixed-seed
+pseudo-random sweep: example 0 is the minimal corner (hypothesis-style
+shrinking target), the rest are seeded uniform draws, so failures reproduce
+bit-for-bit across runs.
+"""
+from __future__ import annotations
+
+import random
+import types
+import zlib
+from typing import Any, Callable
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, minimal: Callable[[], Any], draw: Callable[[random.Random], Any]):
+        self._minimal = minimal
+        self._draw = draw
+
+    def map(self, fn: Callable) -> "_Strategy":
+        return _Strategy(lambda: fn(self._minimal()),
+                         lambda rng: fn(self._draw(rng)))
+
+    def example_at(self, idx: int, rng: random.Random):
+        return self._minimal() if idx == 0 else self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+    return _Strategy(lambda: min_value,
+                     lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda: min_value,
+                     lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda: False, lambda rng: rng.choice((False, True)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda: elements[0], lambda rng: rng.choice(elements))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+
+
+def given(**strats: _Strategy):
+    def deco(test_fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for idx in range(n):
+                # crc32, not hash(): builtin str hashing is salted per process
+                # and would break run-to-run reproducibility of the draws.
+                rng = random.Random(
+                    zlib.crc32(test_fn.__qualname__.encode()) * 1000 + idx)
+                kwargs = {k: s.example_at(idx, rng) for k, s in strats.items()}
+                try:
+                    test_fn(**kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise with the draw
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis): {kwargs}") from e
+
+        # keep the test's identity for pytest, but NOT __wrapped__ — pytest
+        # would then inspect the original signature and demand fixtures for
+        # the strategy parameters.
+        wrapper.__name__ = test_fn.__name__
+        wrapper.__qualname__ = test_fn.__qualname__
+        wrapper.__doc__ = test_fn.__doc__
+        wrapper.__module__ = test_fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

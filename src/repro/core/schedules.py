@@ -29,7 +29,20 @@ Four generators are provided, mirroring the paper:
 Schedules are plain data: they drive (a) the Gantt :mod:`repro.core.simulator`,
 (b) the Pallas backward kernel's scalar-prefetch index maps
 (:mod:`repro.kernels.flash_bwd`), and (c) the cross-chip ring/context-parallel
-step order (:mod:`repro.dist.ring_attention`).
+step order (:mod:`repro.dist.ring_attention`).  The schedule↔ring mapping is:
+
+  ``shift``            ↔ the full-mask ring step order: devices are the workers,
+                         KV blocks rotate one hop per step via ppermute, so the
+                         device holding Q block *i* processes KV block
+                         ``(i - t) mod n`` at step *t* — exactly worker *i*
+                         visiting Q tiles ``(i, i+1, …)`` read KV-stationary.
+  ``symmetric_shift``  ↔ the causal **zigzag** layout: placing sequence chunk
+                         pair ``(i, 2n-1-i)`` on device *i* realizes the
+                         longest-with-shortest KV-row fold across chips; the
+                         traversal is the same cyclic shift.
+                         (``repro.dist.ring_attention.ring_step_offsets``
+                         derives — and asserts — both mappings from these
+                         generators.)
 """
 from __future__ import annotations
 
@@ -277,17 +290,26 @@ GENERATORS = {
 }
 
 
-def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False) -> Schedule:
-    """Uniform entry point used by kernels / CP / benchmarks."""
+def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
+                  n_q: int | None = None) -> Schedule:
+    """Uniform entry point used by kernels / CP / benchmarks.
+
+    ``n_q`` reaches the rectangular-grid generators (``fa3``, ``shift``);
+    ``descending`` / ``symmetric_shift`` are square by construction (their
+    KV-row folds pair rows with columns) and reject a differing ``n_q``.
+    """
     if name == "fa3":
-        return fa3(n, n_heads, causal)
+        return fa3(n, n_heads, causal, n_q=n_q)
+    if name in ("descending", "symmetric_shift") and n_q not in (None, n):
+        raise ValueError(f"{name} schedules are square (n_kv == n_q == {n}); "
+                         f"got n_q={n_q}")
     if name == "descending":
         return descending(n, n_heads, causal)
     if name == "shift":
         if causal:
             raise ValueError("shift scheduling is the full-mask optimum; "
                              "use symmetric_shift for causal masks (paper §3.4)")
-        return shift(n, n_heads)
+        return shift(n, n_heads, n_q=n_q)
     if name == "symmetric_shift":
         if not causal:
             raise ValueError("symmetric_shift is the causal-mask optimum; "

@@ -1,0 +1,20 @@
+"""repro.dist — distributed execution subsystem.
+
+Extends DASH's deterministic attention scheduling from intra-kernel (Pallas
+workers) to cross-chip execution:
+
+  sharding        logical-axis sharding rules (levanter/haliax-style):
+                  ``shard``/``use_rules``/``RULE_SETS`` map the models' logical
+                  axes onto mesh ``PartitionSpec``s (TP / FSDP+TP / CP).
+  ring_attention  context-parallel ring attention whose per-device step order
+                  IS the paper's shift (full-mask) / symmetric-shift-via-zigzag
+                  (causal) schedule — bitwise-deterministic fwd and bwd.
+  pipeline        GPipe-style pipeline parallelism over a stage mesh axis with
+                  the analytic bubble fraction (the §3.2 startup-term analogue).
+  compression     deterministic blockwise-int8 gradient compression with
+                  error-feedback state for bandwidth-bound data parallelism.
+
+Submodules import lazily via normal ``import repro.dist.<name>``; this package
+init stays empty so ``repro.models`` → ``repro.dist.sharding`` does not drag in
+the shard_map-based modules.
+"""

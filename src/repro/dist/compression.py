@@ -1,0 +1,63 @@
+"""Deterministic gradient compression with error feedback (int8-style).
+
+Data-parallel reproducibility needs the *compression* step to be a pure
+function of the gradient values: :func:`_quant_dequant` is blockwise
+max-scaled int8 quantization (symmetric, round-half-even) with no stochastic
+rounding — the same grads always compress to the same bytes, so the
+all-reduce payload (and therefore the update) is bitwise repeatable.
+
+Error feedback (Karimireddy et al.-style) keeps the *accumulated* compressed
+stream unbiased: the residual ``e_t = y_t - C(y_t)`` (with ``y_t = g_t +
+e_{t-1}``) is carried in fp32 in the train state (``state["ef"]``, sharded
+like the parameters — see ``train/step.py``), so the sum of compressed grads
+tracks the true gradient sum to within a single step's quantization error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+BLOCK = 256          # quantization block (values share one fp32 scale)
+QMAX = 127.0         # symmetric int8 range; max error = scale/2 = |block|max/254
+
+
+def _quant_dequant(x, block: int = BLOCK):
+    """Blockwise max-scaled int8 quantize→dequantize (deterministic).
+
+    Per block of ``block`` consecutive values: ``scale = max|x| / 127``,
+    ``q = clip(round(x / scale))`` — absolute error ≤ scale/2.  Returns the
+    dequantized array in the input's shape/dtype (the int codes plus one fp32
+    scale per block are what would go on the wire: ~4× smaller than fp32).
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(F32)
+    n = flat.size
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), F32)])
+    xb = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / QMAX
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / scale), -QMAX, QMAX)
+    deq = (q * scale).reshape(-1)[:n].reshape(shape)
+    return deq.astype(dtype)
+
+
+def ef_init(params):
+    """Zero error-feedback state mirroring ``params`` (fp32 residuals)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compress_grads(grads, ef):
+    """Compress a gradient pytree with error feedback.
+
+    ``y = g + e``; ``c = quant_dequant(y)``; ``e' = y - c``.  Returns
+    ``(compressed_grads_f32, new_ef)`` — both pure functions of the inputs,
+    hence deterministic and safe inside jit/shard_map.
+    """
+    y = jax.tree.map(lambda g, e: g.astype(F32) + e, grads, ef)
+    c = jax.tree.map(_quant_dequant, y)
+    new_ef = jax.tree.map(lambda a, b: a - b, y, c)
+    return c, new_ef

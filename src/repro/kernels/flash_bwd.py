@@ -35,6 +35,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+if not hasattr(pltpu, "CompilerParams"):      # named TPUCompilerParams on jax 0.4.x
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
 from repro.core.schedules import Schedule
 
 NEG_INF = -1e30

@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+if not hasattr(pltpu, "CompilerParams"):      # named TPUCompilerParams on jax 0.4.x
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 

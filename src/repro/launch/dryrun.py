@@ -175,6 +175,8 @@ def _lower_compile(cfg, shape, rules, tcfg, mesh):
 
 def _measures(compiled, n_dev):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jaxlib<=0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     coll, counts = collective_bytes(compiled.as_text(), n_dev)
     return {"flops": cost.get("flops", 0.0),
             "bytes_accessed": cost.get("bytes accessed", 0.0),
@@ -300,7 +302,8 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
-    ap.add_argument("--rules", default=None, choices=[None, "tp", "fsdp_tp", "cp"])
+    ap.add_argument("--rules", default=None,
+                    choices=[None, "tp", "fsdp_tp", "zero3_pod", "cp"])
     ap.add_argument("--tag", default="")
     ap.add_argument("--set", action="append", default=[], dest="overrides",
                     help="ModelConfig override key=value (hillclimb experiments)")

@@ -46,8 +46,12 @@ def test_permuted_sum_deviates():
 def test_tree_sum_fixed_matches_fp64(n, arity):
     p = _parts(2, n=n, shape=(4,), scale=10.0)
     got = det.tree_sum_fixed(p, arity=arity)
-    want = jnp.sum(p.astype(jnp.float64), axis=0)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    # fp64 reference via numpy — x64 is disabled above, so an astype(float64)
+    # inside jax would silently stay f32.  atol covers the f32 rounding of the
+    # tree sum itself when the true sum cancels toward zero (n·scale·eps).
+    want = np.sum(np.asarray(p, np.float64), axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                               atol=n * 10.0 * 1.2e-7)
     # determinism: same tree shape, same bits
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(det.tree_sum_fixed(p, arity=arity)))

@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -71,7 +73,7 @@ SCRIPT = textwrap.dedent("""
 def test_dryrun_lowering_small_mesh():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=1200,
-                       env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo")
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO_ROOT)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
     assert "train cell lowered" in r.stdout
     assert "decode cell lowered ok" in r.stdout

@@ -14,6 +14,8 @@ from repro.configs import registry
 from repro.train import optimizer as O
 from repro.train import step as S
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def _small_state():
     cfg = registry.get("stablelm-1.6b").reduced()
@@ -74,7 +76,7 @@ print("elastic reshard OK")
     r = subprocess.run([sys.executable, "-c", script, str(tmp_path)],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": os.environ["PATH"]},
-                       cwd="/root/repo")
+                       cwd=REPO_ROOT)
     assert r.returncode == 0, r.stderr
     assert "elastic reshard OK" in r.stdout
 
@@ -86,6 +88,6 @@ def test_kill_restore_bitwise_identical():
         [sys.executable, "-m", "repro.launch.failures", "--steps", "16",
          "--die-at", "12", "--ckpt-every", "5"],
         capture_output=True, text=True, timeout=1500,
-        env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo")
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO_ROOT)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
     assert "PASSED" in r.stdout

@@ -8,6 +8,8 @@ import pytest
 
 from repro.dist.pipeline import bubble_fraction
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -64,7 +66,7 @@ SCRIPT = textwrap.dedent("""
 def test_pipeline_parallel_multidevice():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=900,
-                       env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo")
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO_ROOT)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
     for line in ("pipeline forward OK", "pipeline grads OK",
                  "pipeline determinism + ppermute OK"):
