@@ -1,0 +1,90 @@
+"""Serving throughput: continuous batching (paged KV) vs. the static engine.
+
+Emits CSV rows plus benchmarks/BENCH_serve.json with prefill and decode
+tokens/s on the reduced config.  The headline number is
+``continuous_vs_static_b1`` — aggregate continuous-batching decode throughput
+over a 4-slot engine relative to static single-stream decode; the acceptance
+bar (ISSUE 2) is >= 2x.  The continuous engine pays for its determinism
+bookkeeping (host page tables, per-request sampling keys) with in-flight
+batching: 4 requests advance per device dispatch instead of 1.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import InputShape
+from repro.launch.specs import make_batch
+from repro.models import transformer as T
+from repro.serve.engine import ContinuousEngine, Engine
+
+ART = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+PROMPT, GEN, N_REQ, SLOTS = 32, 48, 8, 4
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def main() -> None:
+    cfg = registry.get("stablelm-1.6b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    results = {"config": "stablelm-1.6b/reduced", "prompt": PROMPT, "gen": GEN,
+               "n_requests": N_REQ, "n_slots": SLOTS, "cases": {}}
+
+    # ---- static engine: single-stream and full-batch decode ----------------
+    for b in (1, 4):
+        batch = make_batch(cfg, InputShape("s", "prefill", PROMPT, b),
+                           jax.random.PRNGKey(1))["batch"]
+        eng = Engine(cfg, params, max_seq=PROMPT + GEN)
+        jax.block_until_ready(eng._prefill(params, batch)[0])   # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng._prefill(params, batch)[0])
+        prefill_s = time.perf_counter() - t0
+        eng.generate(batch, 4)                          # warm both dispatch paths
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.generate(batch, GEN))
+        dt = time.perf_counter() - t0
+        tps = b * GEN / dt
+        results["cases"][f"static_b{b}_decode_tps"] = tps
+        results["cases"][f"static_b{b}_prefill_tps"] = b * PROMPT / prefill_s
+        _row(f"serve_static_b{b}_decode", dt / (b * GEN) * 1e6, f"{tps:.0f}tok/s")
+
+    # ---- continuous engine: N_REQ requests over SLOTS slots ----------------
+    def build():
+        eng = ContinuousEngine(cfg, params, n_slots=SLOTS,
+                               max_seq=PROMPT + GEN + 16, page_size=16,
+                               prefill_chunk=PROMPT)
+        for i in range(N_REQ):
+            eng.submit(rng.randint(1, cfg.vocab, size=PROMPT).tolist(),
+                       req_id=i, max_new_tokens=GEN)
+        return eng
+
+    build().run()                                       # compile both shapes
+    eng = build()
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in out.values())
+    tps = total / dt
+    results["cases"]["continuous_s4_decode_tps"] = tps
+    results["cases"]["continuous_decode_steps"] = eng.decode_steps
+    _row("serve_continuous_s4", dt / total * 1e6, f"{tps:.0f}tok/s")
+
+    ratio = tps / results["cases"]["static_b1_decode_tps"]
+    results["cases"]["continuous_vs_static_b1"] = ratio
+    _row("serve_continuous_vs_static_b1", 0, f"{ratio:.2f}x")
+    with open(ART, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    main()

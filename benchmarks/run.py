@@ -6,6 +6,7 @@
   bench_determinism    Table 1 gradient-deviation
   bench_roofline       §Roofline terms from the dry-run artifacts (ours)
   bench_ring           cross-chip ring attention, contig vs zigzag (ours)
+  bench_serve          continuous-batching vs static serving tokens/s (ours)
 """
 import importlib
 import sys
@@ -18,6 +19,7 @@ MODULES = [
     "benchmarks.bench_determinism",
     "benchmarks.bench_roofline",
     "benchmarks.bench_ring",
+    "benchmarks.bench_serve",
 ]
 
 

@@ -1,13 +1,17 @@
-"""Batched serving example: prefill + greedy decode on a reduced config.
+"""Serving example: static prefill+decode, then continuous batching.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch whisper-base]
 
-Exercises the same prefill/decode step functions the 32k/500k dry-run cells
-lower, including cross-attention caches for the enc-dec arch.
+The static pass exercises the same prefill/decode step functions the 32k/500k
+dry-run cells lower (incl. cross-attention caches for the enc-dec arch); the
+continuous pass (decoder-only archs) drives the batch-invariant paged-KV
+engine — README §Serving.
 """
 import argparse
 
+from repro.configs import registry
 from repro.launch import serve
+from repro.models.transformer import supports_paged
 
 
 def main():
@@ -16,6 +20,10 @@ def main():
     args = ap.parse_args()
     serve.main(["--arch", args.arch, "--reduced", "--batch", "4",
                 "--prompt-len", "64", "--gen", "16"])
+    if supports_paged(registry.get(args.arch)):
+        serve.main(["--arch", args.arch, "--reduced", "--engine", "continuous",
+                    "--requests", "6", "--slots", "3", "--prompt-len", "48",
+                    "--gen", "16"])
 
 
 if __name__ == "__main__":

@@ -1,4 +1,8 @@
 """Pallas TPU kernels: flash attention forward + DASH-scheduled deterministic
 backward (scalar-prefetch grid order = the paper's SM schedule). ops.py is the
 jit'd custom_vjp wrapper; ref.py the pure-jnp oracle; vmem.py the footprint
-accounting. Validated in interpret mode on CPU (TPU is the target)."""
+accounting. Validated in interpret mode on CPU (TPU is the target).
+
+decode.py is the serving-side sibling: batch-invariant paged split-KV
+attention whose page reduction order is serialized (ascending page-table
+position) the same way flash_bwd serializes the dQ accumulation order."""

@@ -1,0 +1,122 @@
+"""Batch-invariant paged decode/prefill attention (split-KV, fixed reduction order).
+
+The serving engine's determinism contract — a request's tokens are bitwise
+identical regardless of co-batch composition, batch size, padding, or prefill
+chunking — reduces to one kernel property: the attention reduction for a query
+row must be a pure function of *that row's* KV history.  This is the decode-time
+analogue of the training-side discipline in :func:`repro.kernels.flash_bwd.serialize_schedule`:
+there the dQ accumulation order is serialized from the DASH schedule; here the
+split-KV (page) accumulation order is serialized as **ascending page-table
+position** (:func:`page_reduction_order`), independent of
+
+  * which physical page ids back the sequence (the gather indirects through the
+    page table, so pool placement / permutation cannot reorder the sum),
+  * what other rows of the batch contain (every op is row-independent),
+  * how many trailing unallocated pages the table carries (masked lanes
+    contribute *exact* float zeros: ``p = exp(s_masked - m) * mask`` with the
+    running max taken over masked scores, so an empty page updates the
+    (m, l, acc) carry with ``m←max(m,NEG)=m``, ``l←l·1+0``, ``acc←acc·1+0`` —
+    bitwise identities).
+
+Math is fp32 throughout (pages may be stored in the model dtype); the output is
+cast back to the query dtype.  The same entry point serves single-token decode
+(``q: (B, 1, H, D)`` over B cache slots) and chunked prefill (``q: (1, C, H, D)``
+for one slot): per-row validity comes from ``q_positions`` (row *i* attends to
+logical KV positions ``<= q_positions[i]``), so causality inside a freshly
+written chunk and the decode length mask are the same code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def page_reduction_order(max_pages: int) -> np.ndarray:
+    """The serialized page accumulation order: ascending page-table position.
+
+    Mirrors ``flash_bwd.serialize_schedule`` — the order is plain data so tests
+    and docs can state the contract, and the kernel scan iterates exactly this
+    array.  Logical page ``j`` holds tokens ``[j*page_size, (j+1)*page_size)``.
+    """
+    return np.arange(max_pages, dtype=np.int32)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, q_positions,
+                    sm_scale: Optional[float] = None):
+    """Attention over a paged KV pool, batch-invariant per query row.
+
+    Args:
+      q: (B, L, H, D) queries (L=1 decode; L=chunk prefill).
+      k_pages, v_pages: (P, page_size, Hk, D) global page pools (any dtype).
+      page_table: (B, max_pages) int32 physical page id per logical page slot
+        (entries past a row's allocation may be any valid id — masked out).
+      q_positions: (B, L) int32 absolute position of each query; row attends to
+        logical positions ``<= q_positions[b, l]`` (invalid/pad rows may carry
+        any position; their output is garbage the caller must mask).
+      sm_scale: optional softmax scale (default 1/sqrt(D)).
+
+    Returns:
+      (B, L, H, D) in q.dtype.
+    """
+    b, l, h, d = q.shape
+    n_pages, page_size, hk, _ = k_pages.shape
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    max_pages = page_table.shape[1]
+
+    qf = q.astype(jnp.float32).reshape(b, l, hk, g, d) * sm_scale
+    qpos = q_positions[:, :, None, None, None]                  # (B, L, 1, 1, 1)
+    in_page = jnp.arange(page_size, dtype=jnp.int32)
+
+    def one_page(carry, j):
+        m, s_sum, acc = carry
+        phys = page_table[:, j]                                 # (B,)
+        kp = k_pages[phys].astype(jnp.float32)                  # (B, ps, Hk, D)
+        vp = v_pages[phys].astype(jnp.float32)
+        scores = jnp.einsum("blkgd,bskd->blkgs", qf, kp,
+                            preferred_element_type=jnp.float32)  # (B,L,Hk,g,ps)
+        kv_pos = j * page_size + in_page                        # logical positions
+        mask = kv_pos[None, None, None, None, :] <= qpos        # (B,L,1,1,ps)
+        s_masked = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_masked, axis=-1))
+        # exact-zero discipline: exp(NEG-m) may underflow to 0 anyway, but the
+        # mask multiply *guarantees* masked lanes add float +0.0 — the bitwise
+        # identity that makes trailing empty pages and stale pool content
+        # invisible (module docstring).
+        p = jnp.exp(s_masked - m_new[..., None]) * mask
+        corr = jnp.exp(m - m_new)
+        s_sum = s_sum * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "blkgs,bskd->blkgd", p, vp, preferred_element_type=jnp.float32)
+        return (m_new, s_sum, acc), None
+
+    init = (jnp.full((b, l, hk, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, l, hk, g), jnp.float32),
+            jnp.zeros((b, l, hk, g, d), jnp.float32))
+    (m, s_sum, acc), _ = jax.lax.scan(
+        one_page, init, jnp.asarray(page_reduction_order(max_pages)))
+    denom = jnp.where(s_sum == 0.0, 1.0, s_sum)                 # pad rows only
+    out = acc / denom[..., None]
+    return out.reshape(b, l, h, d).astype(q.dtype)
+
+
+def gather_kv(pages, page_table, seq_len: int):
+    """Materialize contiguous (B, seq_len, Hk, D) KV from a paged pool.
+
+    Test/debug helper — the serving path never forms this array.  ``seq_len``
+    is a static bound; rows with shorter live sequences carry stale pool
+    content past their length (mask with the per-row length downstream).
+    """
+    n_pages, page_size, hk, d = pages.shape
+    need = -(-seq_len // page_size)
+    flat = pages[page_table[:, :need]]          # (B, need, ps, Hk, D)
+    b = page_table.shape[0]
+    return flat.reshape(b, need * page_size, hk, d)[:, :seq_len]

@@ -1,10 +1,15 @@
-"""Batched serving driver: prefill a batch of prompts, then decode steps.
+"""Serving driver: static batch or continuous batching over paged KV slots.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
         --batch 4 --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --engine continuous --requests 8 --slots 4 --gen 32
 
-Exercises the same prefill/decode step functions the dry-run lowers at 32k/500k
-scale; on CPU it runs the reduced configs end to end and reports tokens/s.
+The static path exercises the same prefill/decode step functions the dry-run
+cells lower at 32k/500k scale; the continuous path drives the batch-invariant
+deterministic engine (``repro.serve.ContinuousEngine`` — README §Serving):
+chunked prefill + in-flight batched decode over paged KV cache slots, with
+per-request tokens that are bitwise independent of co-batching.
 """
 from __future__ import annotations
 
@@ -13,32 +18,19 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
 from repro.launch.specs import make_batch
 from repro.configs.base import InputShape
 from repro.models import transformer as T
+from repro.serve.engine import ContinuousEngine, SampleConfig
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args(argv)
-
-    cfg = registry.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init(cfg, key)
-    max_seq = args.prompt_len + args.gen
+def _static(cfg, params, args, key):
     shape = InputShape("serve", "prefill", args.prompt_len, args.batch)
     data = make_batch(cfg, shape, key)
+    max_seq = args.prompt_len + args.gen
 
     prefill = jax.jit(lambda p, b: T.prefill_step(p, b, cfg, max_seq=max_seq))
     decode = jax.jit(lambda p, c, t, pos, cx: T.decode_step(p, c, t, pos, cfg,
@@ -61,6 +53,53 @@ def main(argv=None):
           f"decode {args.gen - 1} steps at {tps:.1f} tok/s")
     print("sample tokens[0,:16]:", gen[0, :16].tolist())
     return gen
+
+
+def _continuous(cfg, params, args):
+    page = 16
+    max_seq = -(-(args.prompt_len + args.gen) // page) * page
+    eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_seq=max_seq,
+                           page_size=page, prefill_chunk=min(32, args.prompt_len),
+                           scfg=SampleConfig(seed=args.seed))
+    rng = np.random.RandomState(args.seed)
+    for i in range(args.requests):
+        plen = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1)
+        eng.submit(rng.randint(1, cfg.vocab, size=plen).tolist(),
+                   req_id=i, max_new_tokens=args.gen)
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"continuous: {args.requests} requests / {args.slots} slots, "
+          f"{total} tokens in {dt:.2f}s ({total / max(1e-9, dt):.1f} tok/s, "
+          f"{eng.decode_steps} decode steps)")
+    print("request 0 tokens:", out[0][:16].tolist())
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init(cfg, key)
+    if args.engine == "continuous":
+        return _continuous(cfg, params, args)
+    return _static(cfg, params, args, key)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import shard
+from repro.kernels.decode import paged_attention
 from repro.kernels.ops import attention as attention_op
 from repro.models.module import ParamDef as PD
 
@@ -140,11 +141,18 @@ def _sdpa_decode(q, k_cache, v_cache, valid_len):
 
 
 def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
-                    causal=True, cross_x=None, window=None):
+                    causal=True, cross_x=None, window=None, paged=None):
     """GQA attention. Modes:
       train/prefill: cache=None → full (causal or not) self/cross attention.
       decode:        cache=(k,v) (B,S,Hk,D), cache_pos scalar → 1-token step;
                      returns updated cache.
+      paged:         cache=(k_pages, v_pages) pools, ``paged`` a dict with
+                     ``page_table`` (B, max_pages), ``write_pages`` /
+                     ``write_offsets`` (B·S,) token-major scatter targets —
+                     fresh K/V are written into the pools, then the
+                     batch-invariant fixed-order split-KV reduction runs
+                     (:mod:`repro.kernels.decode`); serves both chunked prefill
+                     and batched one-token decode.
       window:        optional sliding-window size (attention-free beyond it).
     Returns (y, new_cache).
     """
@@ -155,6 +163,18 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
     use_rope = cross_x is None
     kv_positions = positions if cross_x is None else (
         jnp.arange(xkv.shape[1])[None, :])
+
+    if paged is not None:
+        k_pages, v_pages = cache
+        q, k, v = _project_qkv(p, x, x, cfg, positions, positions, use_rope=True)
+        k_flat = k.reshape((-1,) + k.shape[2:]).astype(k_pages.dtype)
+        v_flat = v.reshape((-1,) + v.shape[2:]).astype(v_pages.dtype)
+        k_pages = k_pages.at[paged["write_pages"], paged["write_offsets"]].set(k_flat)
+        v_pages = v_pages.at[paged["write_pages"], paged["write_offsets"]].set(v_flat)
+        out = paged_attention(q, k_pages, v_pages, paged["page_table"], positions)
+        out = out.reshape(x.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
+        y = dot(out, p["wo"], out_dtype=x.dtype)
+        return shard(y, "batch", "seq", "act_embed"), (k_pages, v_pages)
 
     if cache is None:
         q, k, v = _project_qkv(p, x, xkv, cfg, positions, kv_positions, use_rope)

@@ -71,7 +71,7 @@ def _moe(p, x, cfg):
 
 
 def _apply_block(p, x, cfg, kind: str, *, positions, cache, cache_pos, cross_x,
-                 causal=True):
+                 causal=True, paged=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), F32)
     new_cache: Dict[str, Any] = {}
@@ -79,7 +79,7 @@ def _apply_block(p, x, cfg, kind: str, *, positions, cache, cache_pos, cross_x,
         h, c_attn = L.attention_block(
             p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, positions=positions,
             cache=None if cache is None else cache.get("attn"),
-            cache_pos=cache_pos, causal=causal)
+            cache_pos=cache_pos, causal=causal, paged=paged)
         x = x + h
         x = checkpoint_name(x, "attn_out")
         if c_attn is not None:
@@ -188,7 +188,7 @@ REMAT_POLICIES = {
 
 
 def _apply_stack(blocks, x, cfg, *, positions, caches, cache_pos, cross_x,
-                 causal=True, remat=False, remat_policy="none"):
+                 causal=True, remat=False, remat_policy="none", paged=None):
     """blocks: dict of stacked param trees keyed 'b{i}_{kind}'."""
     aux_total = jnp.zeros((), F32)
     new_caches = {} if caches is not None else None
@@ -201,7 +201,8 @@ def _apply_stack(blocks, x, cfg, *, positions, caches, cache_pos, cross_x,
             p_, cache_ = scan_in if caches is not None else (scan_in, None)
             x_, c_, a_ = _apply_block(p_, x_, cfg, kind, positions=positions,
                                       cache=cache_, cache_pos=cache_pos,
-                                      cross_x=cross_x, causal=causal)
+                                      cross_x=cross_x, causal=causal,
+                                      paged=paged)
             return (x_, aux_ + a_), c_
 
         if remat:
@@ -219,6 +220,14 @@ def _apply_stack(blocks, x, cfg, *, positions, caches, cache_pos, cross_x,
 # --------------------------------------------------------------------------- #
 # public entry points
 # --------------------------------------------------------------------------- #
+def _lm_logits(params, x, cfg):
+    """Final-norm'd activations → vocab logits (tied or separate head)."""
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x,
+                          params["embed"]["tok"].astype(cfg.dtype))
+    return L.apply_lm_head(params["lm_head"], x, cfg)
+
+
 def _encode(params, cfg, frames, remat=False):
     ecfg = cfg.encoder
     h = L.dot(frames, params["encoder"]["frontend_proj"]).astype(ecfg.dtype)
@@ -252,11 +261,7 @@ def forward(params, batch, cfg, *, remat=False, remat_policy="none"):
                              caches=None, cache_pos=None, cross_x=cross_x,
                              remat=remat, remat_policy=remat_policy)
     x = L.apply_norm(params["ln_f"], x, cfg)
-    head = params["embed"]["tok"] if cfg.tie_embeddings else params["lm_head"]["w"]
-    if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cfg.dtype))
-    else:
-        logits = L.apply_lm_head(params["lm_head"], x, cfg)
+    logits = _lm_logits(params, x, cfg)
     if cfg.frontend == "vision":  # logits for text positions only
         logits = logits[:, -batch["tokens"].shape[1]:]
     return logits, aux
@@ -301,12 +306,7 @@ def prefill_step(params, batch, cfg, *, max_seq=None):
     x, caches, _ = _apply_stack(params["blocks"], x, cfg, positions=positions,
                                 caches=caches, cache_pos=0, cross_x=cross_x)
     x = L.apply_norm(params["ln_f"], x[:, -1:], cfg)
-    head = params["embed"]["tok"] if cfg.tie_embeddings else params["lm_head"]["w"]
-    if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cfg.dtype))
-    else:
-        logits = L.apply_lm_head(params["lm_head"], x, cfg)
-    return logits, caches, cross_x
+    return _lm_logits(params, x, cfg), caches, cross_x
 
 
 def decode_step(params, caches, tokens, cache_pos, cfg, *, cross_x=None):
@@ -321,12 +321,63 @@ def decode_step(params, caches, tokens, cache_pos, cfg, *, cross_x=None):
                                     caches=caches, cache_pos=cache_pos,
                                     cross_x=cross_x)
     x = L.apply_norm(params["ln_f"], x, cfg)
-    head = params["embed"]["tok"] if cfg.tie_embeddings else params["lm_head"]["w"]
-    if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cfg.dtype))
-    else:
-        logits = L.apply_lm_head(params["lm_head"], x, cfg)
-    return logits, new_caches
+    return _lm_logits(params, x, cfg), new_caches
+
+
+# --------------------------------------------------------------------------- #
+# paged serving entry points (continuous batching; see repro.serve)
+# --------------------------------------------------------------------------- #
+def supports_paged(cfg) -> bool:
+    """True iff the paged serving path covers this config: decoder-only with
+    an attention-only pattern (the one capability rule — engine asserts it,
+    ``init_paged_cache`` raises on it, examples filter with it)."""
+    return (cfg.frontend is None and cfg.encoder is None
+            and all(k == "attn" for k in cfg.block_pattern))
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int):
+    """Paged KV pools matching the scan structure: per attn block key,
+    ``{"attn": (k_pages, v_pages)}`` of shape (n_rep, n_pages, page_size, Hk, D).
+
+    Serving over pages is attention-only: SSM/xLSTM states are not paged, and
+    MoE capacity routing is batch-*dependent* by construction (token dropping
+    couples rows), which would break the batch-invariance contract.
+    """
+    bad = [k for k in cfg.block_pattern if k != "attn"]
+    if bad:
+        raise NotImplementedError(
+            f"paged serving supports attention-only patterns; got {bad} "
+            f"(SSM states are unpaged; MoE capacity routing is batch-coupled)")
+    n_rep = cfg.n_layers // len(cfg.block_pattern)
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    kv = lambda: jnp.zeros((n_rep, n_pages, page_size, hk, hd), cfg.dtype)
+    return {f"b{i}_attn": {"attn": (kv(), kv())}
+            for i in range(len(cfg.block_pattern))}
+
+
+def paged_step(params, caches, tokens, positions, page_table, write_pages,
+               write_offsets, cfg):
+    """One paged serving step: a prefill chunk OR a batched one-token decode.
+
+    tokens / positions: (B, L) token ids and absolute positions (L=1 for the
+    cross-slot decode step; B=1, L=chunk for per-request chunked prefill).
+    page_table: (B, max_pages) physical page per logical page slot.
+    write_pages / write_offsets: (B·L,) token-major scatter targets for the
+    fresh K/V (the engine points pad tokens at its trash page).
+    Returns (logits (B, L, V), new caches).  Every op is row-independent and
+    the KV reduction order is fixed (repro.kernels.decode), so a row's logits
+    are a pure function of its own (params, tokens, positions, page history).
+    """
+    x = L.apply_embed(params["embed"], tokens, cfg)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][positions].astype(cfg.dtype)
+    paged = dict(page_table=page_table, write_pages=write_pages,
+                 write_offsets=write_offsets)
+    x, new_caches, _ = _apply_stack(params["blocks"], x, cfg,
+                                    positions=positions, caches=caches,
+                                    cache_pos=0, cross_x=None, paged=paged)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return _lm_logits(params, x, cfg), new_caches
 
 
 def loss_fn(params, batch, cfg, *, remat=False, remat_policy="none"):

@@ -1,0 +1,21 @@
+"""Deterministic serving: paged KV cache + continuous batching, batch-invariant.
+
+Contract (see README §Serving): for a fixed (params, prompt, seed), a request's
+emitted tokens are **bitwise identical** regardless of co-batch composition,
+batch size, prompt padding, request arrival order, or prefill chunk size.
+
+  kv_cache.py   paged KV pool with a deterministic lowest-id page allocator
+  scheduler.py  FCFS-by-request-id admission, lowest-slot assignment, eviction
+  engine.py     ``Engine`` (static-batch baseline) and ``ContinuousEngine``
+                (chunked prefill + in-flight batching over cache slots)
+
+The kernel underneath is :mod:`repro.kernels.decode` — a split-KV attention
+whose page reduction order is serialized (ascending page-table position), the
+decode-time analogue of ``repro.kernels.flash_bwd.serialize_schedule``.
+"""
+from repro.serve.engine import ContinuousEngine, Engine, SampleConfig
+from repro.serve.kv_cache import PagedKVCache, PagedLayout
+from repro.serve.scheduler import FCFSScheduler, Request
+
+__all__ = ["ContinuousEngine", "Engine", "SampleConfig", "PagedKVCache",
+           "PagedLayout", "FCFSScheduler", "Request"]

@@ -1,20 +1,42 @@
-"""Batched generation engine: prefill + decode loop with deterministic sampling.
+"""Serving engines: static-batch baseline + batch-invariant continuous batching.
 
-Wraps the jitted prefill/decode step functions (the same ones the 32k/500k
-dry-run cells lower) with: greedy or temperature sampling (threefry-keyed —
-reproducible per (seed, step, batch row)), EOS early-exit masking, and an
-in-place ring of at most `max_seq` cache slots. Deterministic: identical
-(params, prompts, seed) → identical tokens, run to run.
+``Engine`` is the original static-batch greedy/sampled loop (kept as the
+benchmark baseline; its outputs depend on batch composition because rows share
+one padded shape and one sampling key per step).  ``ContinuousEngine`` is the
+deterministic serving engine this module is really about:
+
+  * **paged KV** (:mod:`repro.serve.kv_cache`) — per-request page tables over a
+    fixed pool; physical placement is irrelevant to the math;
+  * **deterministic scheduling** (:mod:`repro.serve.scheduler`) — FCFS by
+    request id, lowest free slot/page first: the schedule is a pure function of
+    the request stream;
+  * **chunked prefill** — prompts are processed per-request in fixed-size
+    chunks (B=1, L=chunk jit shape), so a request's prefill compute never
+    depends on what else is in flight;
+  * **in-flight batched decode** — one token per active slot per step over a
+    fixed (n_slots, 1) shape; idle rows carry garbage that is never read;
+  * **per-request sampling keys** — ``fold_in(fold_in(key(seed), request_id),
+    token_index)``, vmapped per row, so sampling is independent of slot
+    placement and co-batch.
+
+Contract (README §Serving, enforced by tests/test_serve_invariance.py): for a
+fixed (params, prompt tokens, seed, sampling config), a request's emitted
+tokens are bitwise identical across co-batch composition, batch size, prompt
+padding, arrival order, and prefill chunk size.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
+from repro.serve.kv_cache import PagedKVCache, PagedLayout
+from repro.serve.scheduler import FCFSScheduler, Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,21 +47,32 @@ class SampleConfig:
     eos_id: Optional[int] = None
 
 
+def _transform_logits(logits, scfg: SampleConfig):
+    """Temperature/top-k transform over the last (vocab) axis — shared by the
+    static batched sampler and the continuous per-row sampler so the two
+    engines always sample from the same distribution for one SampleConfig."""
+    logits = logits / scfg.temperature
+    if scfg.top_k:
+        kth = jax.lax.top_k(logits, scfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return logits
+
+
 def _sample(logits, scfg: SampleConfig, step_key):
     """logits: (B, 1, V) → tokens (B, 1). Deterministic given step_key."""
     logits = logits[:, 0].astype(jnp.float32)
     if scfg.temperature == 0.0:
         return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    logits = logits / scfg.temperature
-    if scfg.top_k:
-        kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+    logits = _transform_logits(logits, scfg)
     return jax.random.categorical(step_key, logits)[:, None].astype(jnp.int32)
 
 
 class Engine:
+    """Static-batch engine (baseline). One padded batch in, lockstep decode."""
+
     def __init__(self, cfg, params, max_seq: int, scfg: SampleConfig = SampleConfig()):
         self.cfg, self.params, self.max_seq, self.scfg = cfg, params, max_seq, scfg
+        self.last_decode_steps = 0
         self._prefill = jax.jit(
             lambda p, b: T.prefill_step(p, b, cfg, max_seq=max_seq))
         self._decode = jax.jit(
@@ -56,14 +89,227 @@ class Engine:
             prompt_len += self.cfg.frontend_len
         out = [tok]
         done = jnp.zeros((tok.shape[0], 1), bool)
+        self.last_decode_steps = 0
         for i in range(1, n_tokens):
             if self.scfg.eos_id is not None:
                 done = done | (tok == self.scfg.eos_id)
+                # all-done probe forces a device sync, so amortize it: poll
+                # every 8 steps instead of serializing every dispatch on it.
+                if i % 8 == 0 and bool(jnp.all(done)):
+                    # all rows finished: the remaining tokens are forced to
+                    # eos anyway — emit them host-side and skip the decodes.
+                    out.append(jnp.full((tok.shape[0], n_tokens - i),
+                                        self.scfg.eos_id, jnp.int32))
+                    break
             logits, caches = self._decode(self.params, caches, tok,
                                           jnp.asarray(prompt_len + i - 1), cross_x)
+            self.last_decode_steps += 1
             nxt = _sample(logits, self.scfg, jax.random.fold_in(key, i))
             if self.scfg.eos_id is not None:
                 nxt = jnp.where(done, self.scfg.eos_id, nxt)
             out.append(nxt)
             tok = nxt
         return jnp.concatenate(out, axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# continuous batching
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _paged_step_fn(cfg):
+    """Shared jitted paged step — cached per (hashable, frozen) config so many
+    engine instances (the invariance suite builds dozens) reuse compilations."""
+    return jax.jit(functools.partial(T.paged_step, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _sampler_fn(scfg: SampleConfig):
+    """Per-request-keyed row sampler: ``fold_in(fold_in(key(seed), request_id),
+    token_index)`` vmapped per row — sampling never sees slot placement or
+    co-batch, which is half of the batch-invariance contract (the other half
+    is the fixed-order paged attention reduction)."""
+    base = jax.random.PRNGKey(scfg.seed)
+
+    def sample(logits, req_ids, steps):          # (B, V), (B,), (B,) -> (B,)
+        logits = logits.astype(jnp.float32)
+        if scfg.temperature == 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def one(row, rid, t):
+            k = jax.random.fold_in(jax.random.fold_in(base, rid), t)
+            return jax.random.categorical(
+                k, _transform_logits(row, scfg)).astype(jnp.int32)
+
+        return jax.vmap(one)(logits, req_ids, steps)
+
+    return jax.jit(sample)
+
+
+@dataclasses.dataclass
+class _Active:
+    """Host-side per-slot decode state."""
+    req: Request
+    produced: List[int]
+    done: bool = False
+
+    @property
+    def next_pos(self) -> int:
+        # position of the last sampled (not yet KV-written) token
+        return len(self.req.tokens) + len(self.produced) - 1
+
+
+class ContinuousEngine:
+    """Continuous-batching deterministic engine over paged KV slots."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 4, max_seq: int = 128,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefill_chunk: int = 32, scfg: SampleConfig = SampleConfig()):
+        assert T.supports_paged(cfg), (
+            "paged serving covers decoder-only, attention-only LMs")
+        assert max_seq % page_size == 0 and prefill_chunk >= 1
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.prefill_chunk = prefill_chunk
+        self.max_seq = max_seq
+        mpps = max_seq // page_size
+        layout = PagedLayout(page_size=page_size,
+                             n_pages=n_pages or n_slots * mpps,
+                             n_slots=n_slots, max_pages_per_slot=mpps)
+        self.cache = PagedKVCache(cfg, layout)
+        self.sched = FCFSScheduler(n_slots)
+        self._slots: Dict[int, _Active] = {}
+        self.results: Dict[int, List[int]] = {}
+        self._next_id = 0
+        self.decode_steps = 0               # telemetry for tests/benchmarks
+
+        self._step = _paged_step_fn(cfg)
+        self._sampler = _sampler_fn(scfg)
+
+    # ------------------------------------------------------------ request API
+    def submit(self, tokens, *, req_id: Optional[int] = None,
+               max_new_tokens: int = 16) -> int:
+        """Queue a request. Lower ids are served first (FCFS by id)."""
+        if req_id is None:
+            req_id = self._next_id
+        tokens = tuple(int(t) for t in np.asarray(tokens).reshape(-1))
+        if req_id in self.results or any(
+                st.req.id == req_id for st in self._slots.values()):
+            # the scheduler only guards pending/active ids; a finished id
+            # would silently overwrite its result and corrupt the FCFS clock
+            raise ValueError(f"request id {req_id} was already served")
+        if len(tokens) + max_new_tokens > self.max_seq:
+            # ValueError, not assert: user-facing validation must survive -O
+            raise ValueError(
+                f"request needs {len(tokens) + max_new_tokens} positions; "
+                f"slot capacity is {self.max_seq}")
+        need = self.cache.layout.pages_for(len(tokens) + max_new_tokens)
+        if need > self.cache.layout.n_pages:
+            # FCFS admission head-of-line blocks on an unfittable request
+            # forever — reject it at the door instead.
+            raise ValueError(
+                f"request {req_id} needs {need} pages but the pool only has "
+                f"{self.cache.layout.n_pages}; raise n_pages or shrink the "
+                f"request")
+        self.sched.submit(Request(req_id, tokens, max_new_tokens))
+        self._next_id = max(self._next_id, req_id + 1)   # only after validation
+        return req_id
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive steps until every submitted request finished; return tokens."""
+        while not self.sched.idle:
+            self.step()
+        return {rid: np.asarray(toks, np.int32)
+                for rid, toks in self.results.items()}
+
+    # ---------------------------------------------------------------- engine
+    def _admission_check(self):
+        """Capacity predicate for one admission round.
+
+        Stateful on purpose: ``FCFSScheduler.admit`` probes several pending
+        requests against the pool before ``_prefill`` allocates anything, so
+        the predicate must count pages claimed by earlier admissions in the
+        same round — otherwise two requests that each fit alone but not
+        together are both admitted and alloc() hits the 'no mid-flight OOM'
+        invariant it exists to protect.
+        """
+        reserved = 0
+
+        def fits(req: Request) -> bool:
+            nonlocal reserved
+            need = self.cache.layout.pages_for(
+                len(req.tokens) + req.max_new_tokens)
+            if need + reserved > self.cache.free_pages:
+                return False
+            reserved += need        # admit() always takes a fitting request
+            return True
+
+        return fits
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Chunked prefill of one request; samples its first token."""
+        lay = self.cache.layout
+        self.cache.alloc(slot, lay.pages_for(len(req.tokens) + req.max_new_tokens))
+        plen, C = len(req.tokens), self.prefill_chunk
+        prompt = np.asarray(req.tokens, np.int32)
+        table = self.cache.device_page_table([slot])     # fixed for the prefill
+        logits = None
+        for start in range(0, plen, C):
+            pos = np.arange(start, start + C, dtype=np.int32)
+            valid = pos < plen
+            toks = np.where(valid, prompt[np.minimum(pos, plen - 1)], 0)
+            wp, wo = self.cache.write_targets(slot, pos, valid)
+            logits, self.cache.pools = self._step(
+                self.params, self.cache.pools,
+                jnp.asarray(toks)[None], jnp.asarray(pos)[None], table,
+                jnp.asarray(wp), jnp.asarray(wo))
+        first = self._sampler(logits[:, (plen - 1) % C],
+                              jnp.asarray([req.id], jnp.int32),
+                              jnp.asarray([0], jnp.int32))
+        self._slots[slot] = st = _Active(req, [int(first[0])])
+        self._finish_check(st)
+
+    def _finish_check(self, st: _Active) -> None:
+        last = st.produced[-1]
+        if ((self.scfg.eos_id is not None and last == self.scfg.eos_id)
+                or len(st.produced) >= st.req.max_new_tokens):
+            st.done = True
+
+    def step(self) -> None:
+        """One engine step: admit+prefill, then one batched decode step."""
+        for slot, req in self.sched.admit(self._admission_check()):
+            self._prefill(slot, req)
+
+        live = [s for s, st in self._slots.items() if not st.done]
+        if live:
+            lay = self.cache.layout
+            n = lay.n_slots
+            toks = np.zeros((n, 1), np.int32)
+            pos = np.zeros((n, 1), np.int32)
+            wp = np.full(n, lay.trash_page, np.int32)
+            wo = np.arange(n, dtype=np.int32) % lay.page_size
+            rids = np.zeros(n, np.int32)
+            steps = np.zeros(n, np.int32)
+            for s in live:
+                st = self._slots[s]
+                toks[s, 0] = st.produced[-1]
+                pos[s, 0] = st.next_pos
+                wp[s], wo[s] = (a[0] for a in self.cache.write_targets(
+                    s, np.asarray([st.next_pos]), np.asarray([True])))
+                rids[s] = st.req.id
+                steps[s] = len(st.produced)
+            logits, self.cache.pools = self._step(
+                self.params, self.cache.pools, jnp.asarray(toks),
+                jnp.asarray(pos), self.cache.device_page_table(),
+                jnp.asarray(wp), jnp.asarray(wo))
+            self.decode_steps += 1
+            nxt = np.asarray(self._sampler(logits[:, 0], jnp.asarray(rids),
+                                           jnp.asarray(steps)))
+            for s in live:
+                st = self._slots[s]
+                st.produced.append(int(nxt[s]))
+                self._finish_check(st)
+
+        for s in [s for s, st in self._slots.items() if st.done]:
+            st = self._slots.pop(s)
+            self.results[st.req.id] = st.produced
+            self.cache.free_slot(s)
+            self.sched.release(s)

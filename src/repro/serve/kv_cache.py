@@ -1,0 +1,109 @@
+"""Paged KV cache: fixed-size pages + per-slot page tables, deterministic alloc.
+
+Layout reuses the tiling vocabulary of ``repro.core.schedules`` — the sequence
+axis is cut into fixed-size tiles (pages) and the attention reduction iterates
+them in a serialized order (:func:`repro.kernels.decode.page_reduction_order`).
+Logical page ``j`` of a slot holds absolute positions ``[j·ps, (j+1)·ps)``;
+the page table maps logical → physical pool pages, so physical placement (and
+therefore pool fragmentation history) can never affect the math.
+
+Determinism rules (README §Serving):
+  * allocation hands out the **lowest-numbered** free pages (a heap), so the
+    physical placement is a pure function of the request stream;
+  * one reserved **trash page** (physical id ``n_pages``) absorbs the K/V
+    writes of pad tokens and idle decode slots; the allocator never hands it
+    out, but unallocated page-table entries *do* point at it (gathers stay
+    in-bounds), so its garbage is gathered — and neutralized by the kernel's
+    position mask, which multiplies every out-of-range lane to an exact float
+    zero (the invariance guarantee rests on that mask, not on reachability).
+
+Host state is numpy; the device pools are a pytree shaped by
+``transformer.init_paged_cache`` and threaded functionally through the jitted
+serving steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static pool geometry (fixed per engine — shapes never depend on load)."""
+    page_size: int
+    n_pages: int            # allocatable pages; pools carry n_pages+1 (trash)
+    n_slots: int
+    max_pages_per_slot: int
+
+    @property
+    def trash_page(self) -> int:
+        return self.n_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+class PagedKVCache:
+    """Device page pools + host page tables with a deterministic allocator."""
+
+    def __init__(self, cfg, layout: PagedLayout):
+        self.cfg, self.layout = cfg, layout
+        self.pools = T.init_paged_cache(cfg, layout.n_pages + 1, layout.page_size)
+        self._free = list(range(layout.n_pages))    # heap: lowest id pops first
+        heapq.heapify(self._free)
+        self.page_table = np.full((layout.n_slots, layout.max_pages_per_slot),
+                                  layout.trash_page, np.int32)
+        self.pages_held = np.zeros(layout.n_slots, np.int32)
+
+    # ------------------------------------------------------------- allocator
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, slot: int, n_pages: int) -> None:
+        """Reserve ``n_pages`` lowest-id free pages for ``slot``."""
+        held = int(self.pages_held[slot])
+        if n_pages > self.free_pages:
+            raise RuntimeError(
+                f"paged KV pool OOM: want {n_pages}, free {self.free_pages} "
+                f"(admission must reserve worst-case up front)")
+        assert held + n_pages <= self.layout.max_pages_per_slot, (slot, n_pages)
+        for j in range(held, held + n_pages):
+            self.page_table[slot, j] = heapq.heappop(self._free)
+        self.pages_held[slot] = held + n_pages
+
+    def free_slot(self, slot: int) -> None:
+        """Return a slot's pages to the pool; table entries revert to trash."""
+        for j in range(int(self.pages_held[slot])):
+            heapq.heappush(self._free, int(self.page_table[slot, j]))
+        self.page_table[slot, :] = self.layout.trash_page
+        self.pages_held[slot] = 0
+
+    # ------------------------------------------------------- device plumbing
+    def device_page_table(self, slots=None) -> jnp.ndarray:
+        """(B, max_pages) int32 for the jitted step (all slots or a subset)."""
+        tbl = self.page_table if slots is None else self.page_table[slots]
+        return jnp.asarray(tbl)
+
+    def write_targets(self, slot: int, positions: np.ndarray,
+                      valid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Token-major (write_pages, write_offsets) for absolute ``positions``.
+
+        Invalid (pad) tokens are pointed at the trash page; offsets stay
+        distinct within the page so duplicate-index scatter order is moot.
+        Pad positions may extend past the slot's capacity (a prefill chunk
+        rounds the prompt up), so the column lookup is clamped — the ``valid``
+        mask routes those entries to the trash page regardless.
+        """
+        ps = self.layout.page_size
+        cols = np.minimum(positions // ps, self.layout.max_pages_per_slot - 1)
+        pages = np.where(valid, self.page_table[slot, cols],
+                         self.layout.trash_page).astype(np.int32)
+        offsets = (positions % ps).astype(np.int32)
+        return pages, offsets

@@ -1,0 +1,90 @@
+"""Deterministic admission/eviction for the continuous-batching engine.
+
+The schedule is a **pure function of the request stream** (the set of
+submitted requests and the step at which each arrived).  Ordering rules
+(README §Serving):
+
+  1. *Admission order*: pending requests are considered in ascending request
+     id (FCFS by id — ids are the arrival clock, ties impossible).
+  2. *Admission condition*: a request is admitted only when a slot is free AND
+     the page pool can cover its worst case (``ceil((prompt+max_new)/page)``
+     pages, reserved up front) — no mid-flight OOM, so eviction never has to
+     preempt a running request.
+  3. *Slot assignment*: the lowest-numbered free slot.
+  4. *Eviction*: a finished request releases its slot and pages at the end of
+     the step in which it finished; freed resources are reusable at the next
+     admission point.
+
+None of this affects *tokens* — per-request output invariance is carried by
+the kernel path (row-independent math, fixed page reduction order); the
+scheduler's determinism makes the *schedule itself* reproducible, which is
+what makes performance traces and failure replays meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``id`` must be unique; lower id = earlier turn."""
+    id: int
+    tokens: Tuple[int, ...]
+    max_new_tokens: int = 16
+
+    def __post_init__(self):
+        # ValueError, not assert: user-facing validation must survive -O
+        if len(self.tokens) == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens <= 0:
+            raise ValueError(f"max_new_tokens must be > 0, got "
+                             f"{self.max_new_tokens}")
+
+
+class FCFSScheduler:
+    """FCFS-by-request-id admission over a fixed set of cache slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.pending: Dict[int, Request] = {}
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self._free_slots = list(range(n_slots))
+        heapq.heapify(self._free_slots)
+
+    def submit(self, req: Request) -> None:
+        if (req.id in self.pending
+                or any(r.id == req.id for r in self.active.values())):
+            # ValueError, not assert: a duplicate id under -O would silently
+            # overwrite the pending request, which would then never be served
+            raise ValueError(f"duplicate request id {req.id}")
+        self.pending[req.id] = req
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and not self.active
+
+    def admit(self, fits: Callable[[Request], bool]) -> List[Tuple[int, Request]]:
+        """Admit pending requests (ascending id) while slots+pages allow.
+
+        ``fits(req)`` is the engine's page-capacity check.  Stops at the first
+        request that does not fit: skipping ahead would let a small late
+        request starve an earlier large one (head-of-line FCFS, deterministic).
+        """
+        admitted = []
+        for rid in sorted(self.pending):
+            if not self._free_slots:
+                break
+            req = self.pending[rid]
+            if not fits(req):
+                break
+            slot = heapq.heappop(self._free_slots)
+            del self.pending[rid]
+            self.active[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def release(self, slot: int) -> None:
+        del self.active[slot]
+        heapq.heappush(self._free_slots, slot)

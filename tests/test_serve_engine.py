@@ -1,4 +1,4 @@
-"""Serve engine + heartbeat/straggler tests."""
+"""Serve engine + scheduler/allocator + heartbeat/straggler tests."""
 import time
 
 import jax
@@ -11,7 +11,9 @@ from repro.configs.base import InputShape
 from repro.launch.heartbeat import HeartbeatConfig, Monitor
 from repro.launch.specs import make_batch
 from repro.models import transformer as T
-from repro.serve.engine import Engine, SampleConfig
+from repro.serve.engine import ContinuousEngine, Engine, SampleConfig
+from repro.serve.kv_cache import PagedKVCache, PagedLayout
+from repro.serve.scheduler import FCFSScheduler, Request
 
 
 @pytest.fixture(scope="module")
@@ -52,6 +54,125 @@ def test_eos_sticky(setup):
         hits = np.where(row == eos)[0]
         if len(hits) and hits[0] < len(row) - 1:
             assert (row[hits[0]:] == eos).all()  # once EOS, always EOS
+
+
+def test_eos_all_done_early_exit(setup):
+    """Once every row has emitted EOS the Python decode loop must stop: the
+    tail is eos-filled host-side, outputs are unchanged, and the number of
+    decode dispatches shrinks accordingly (regression for the full-length
+    loop the static engine used to run)."""
+    cfg, params, _ = setup
+    batch = make_batch(cfg, InputShape("p", "prefill", 16, 1),
+                       jax.random.PRNGKey(2))["batch"]
+    free = Engine(cfg, params, max_seq=64)
+    a = np.asarray(free.generate(batch, 16))
+    assert free.last_decode_steps == 15
+    eos = int(a[0, 1])                       # greedy emits this at step 1
+    eng = Engine(cfg, params, max_seq=64, scfg=SampleConfig(eos_id=eos))
+    b = np.asarray(eng.generate(batch, 16))
+    assert b.shape == (1, 16)
+    k = int(np.where(a[0] == eos)[0][0])
+    np.testing.assert_array_equal(b[0, :k + 1], a[0, :k + 1])
+    assert (b[0, k:] == eos).all()           # once EOS, always EOS (bitwise)
+    assert eng.last_decode_steps < 15, "early exit did not shrink the loop"
+
+
+# ------------------------------------------------------- continuous batching
+def test_continuous_engine_runs_and_is_deterministic(setup):
+    cfg, params, _ = setup
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab, size=n).tolist() for n in (4, 19, 30)]
+
+    def run():
+        eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, page_size=8)
+        for i, p in enumerate(prompts):
+            eng.submit(p, req_id=i, max_new_tokens=6)
+        return eng.run(), eng
+
+    a, eng_a = run()
+    b, _ = run()
+    assert sorted(a) == [0, 1, 2]
+    for i in range(3):
+        assert a[i].shape == (6,)
+        np.testing.assert_array_equal(a[i], b[i])
+    # all resources back in the pool after the stream drains
+    assert eng_a.cache.free_pages == eng_a.cache.layout.n_pages
+    assert eng_a.sched.idle
+
+
+def test_continuous_prefill_chunk_rounds_past_capacity(setup):
+    """A prefill chunk that rounds the prompt past the slot's last page must
+    route the pad tail to the trash page, not index off the page table."""
+    cfg, params, _ = setup
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=48, page_size=16,
+                           prefill_chunk=32)
+    rid = eng.submit(np.arange(1, 34).tolist(), max_new_tokens=8)  # 33 tokens
+    out = eng.run()
+    assert out[rid].shape == (8,)
+
+
+def test_continuous_rejects_unfittable_request(setup):
+    """A request no admission point could ever serve must fail at submit,
+    not head-of-line-block the engine forever."""
+    cfg, params, _ = setup
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64, page_size=16,
+                           n_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(list(range(1, 41)), max_new_tokens=8)   # needs 3 pages
+
+
+def test_continuous_admission_never_overcommits_pool(setup):
+    """Two requests that each fit the pool alone but not together must be
+    serialized by admission, not co-admitted into a mid-flight OOM."""
+    cfg, params, _ = setup
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, page_size=8,
+                           n_pages=9)
+    rng = np.random.RandomState(5)
+    for i in range(2):   # 32+8 tokens -> 5 pages each; 5 <= 9 but 10 > 9
+        eng.submit(rng.randint(1, cfg.vocab, size=32).tolist(),
+                   req_id=i, max_new_tokens=8)
+    out = eng.run()      # must queue the second request, not raise
+    assert sorted(out) == [0, 1] and all(out[i].shape == (8,) for i in out)
+
+
+def test_continuous_rejects_reused_finished_id(setup):
+    cfg, params, _ = setup
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=32, page_size=8)
+    eng.submit([1, 2, 3], req_id=0, max_new_tokens=4)
+    eng.run()
+    with pytest.raises(ValueError, match="already served"):
+        eng.submit([4, 5], req_id=0, max_new_tokens=4)
+
+
+def test_scheduler_fcfs_lowest_slot():
+    s = FCFSScheduler(n_slots=2)
+    for rid in (5, 1, 3):
+        s.submit(Request(rid, (1, 2), 4))
+    got = s.admit(lambda r: True)
+    assert [(slot, r.id) for slot, r in got] == [(0, 1), (1, 3)]  # FCFS by id
+    s.release(0)
+    assert [(slot, r.id) for slot, r in s.admit(lambda r: True)] == [(0, 5)]
+    # head-of-line blocking: an unfitting head must not be skipped
+    s2 = FCFSScheduler(n_slots=2)
+    s2.submit(Request(1, (1,) * 10, 4))
+    s2.submit(Request(2, (1,), 4))
+    assert s2.admit(lambda r: len(r.tokens) < 5) == []
+
+
+def test_paged_allocator_deterministic_lowest_id():
+    cfg = registry.get("stablelm-1.6b").reduced()
+    lay = PagedLayout(page_size=8, n_pages=8, n_slots=2, max_pages_per_slot=4)
+    c = PagedKVCache(cfg, lay)
+    c.alloc(0, 3)
+    c.alloc(1, 2)
+    assert c.page_table[0, :3].tolist() == [0, 1, 2]
+    assert c.page_table[1, :2].tolist() == [3, 4]
+    c.free_slot(0)
+    c.alloc(1, 2)                   # grows slot 1 with the lowest freed ids
+    assert c.page_table[1, :4].tolist() == [3, 4, 0, 1]
+    assert (c.page_table[0] == lay.trash_page).all()
+    with pytest.raises(RuntimeError):
+        c.alloc(0, 5)               # pool OOM surfaces, never silent
 
 
 # ---------------------------------------------------------------- heartbeat
