@@ -1,13 +1,26 @@
 """Paper Figs. 8/9 analogue: deterministic backward-pass throughput per schedule.
 
-Two measurements per (mask × schedule × head_dim):
+Per (mask × schedule × head_dim):
   us_per_call — wall time of the *jitted jnp reference backward* on this CPU
      (an honest measured number; the Pallas kernel itself targets TPU and is
      correctness-validated in interpret mode, not timed);
   derived — modeled TPU utilization of the DASH-scheduled kernel from the DAG
      simulator at calibrated r/c (see bench_schedule_sim.rc_ratio), i.e. the
      quantity Figs. 8/9 plot as throughput, normalized to the fa3 baseline.
+
+Also writes ``benchmarks/BENCH_kernel_bwd.json`` comparing the two kernel
+realizations of every schedule (grid-step counts + modeled makespans):
+
+  serialized       grid = (bh, n_tasks) on one sequential core — makespan is
+                   Σ over worker chains; a W-core part sits at 1/W utilization.
+  worker_parallel  grid = (bh, n_workers, max_chain_len) with the worker axis
+                   parallel — modeled makespan is the *max* chain (plus the
+                   schedule's reduction stalls), i.e. the quantity DASH
+                   actually minimizes. Sentinel padding steps are counted;
+                   they issue no DMAs.
 """
+import json
+import os
 import time
 
 import jax
@@ -17,6 +30,8 @@ from benchmarks.bench_schedule_sim import rc_ratio
 from repro.core import schedules as S
 from repro.core import simulator as sim
 from repro.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "BENCH_kernel_bwd.json")
 
 
 def _measure_ref_bwd(seq, head_dim, causal, reps=3):
@@ -36,26 +51,71 @@ def _measure_ref_bwd(seq, head_dim, causal, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _sched(nm, n, m, causal):
+    return S.cached_schedule(nm, n, n_heads=m, causal=causal)
+
+
+def grid_realizations(nm, n, causal, c, r):
+    """Grid-step counts + modeled makespans for both kernel realizations.
+
+    Uses the n_heads=1 schedule — exactly what the kernel grids run (the bh
+    grid dimension covers batch·heads).
+    """
+    sch = _sched(nm, n, 1, causal)
+    wc = sch.worker_chains()
+    n_tasks = sum(int(v) for v in wc["valid"].sum(1))
+    w, t = wc["kv_ids"].shape
+    res = sim.simulate(sch, c, r)
+    max_chain = max(len(chain) for chain in sch.chains) * (c + r)
+    serialized_makespan = n_tasks * (c + r)
+    return {
+        "schedule": nm,
+        "causal": causal,
+        "n": n,
+        "serialized": {
+            "grid_steps": n_tasks,
+            "modeled_makespan": serialized_makespan,       # Σ chains
+            # one core busy, W-1 idle on a W-worker part
+            "modeled_utilization": round(1.0 / w, 4),
+        },
+        "worker_parallel": {
+            "grid_steps_per_worker": t,
+            "n_workers": w,
+            "sentinel_steps": w * t - n_tasks,
+            "modeled_makespan": res.makespan,              # ≈ max chain
+            "max_chain": max_chain,
+            "makespan_over_max_chain": round(res.makespan / max_chain, 4),
+            "modeled_utilization": round(res.utilization, 4),
+        },
+        "modeled_speedup": round(serialized_makespan / res.makespan, 3),
+        "bitwise_identical": bool(wc["single_visit"]),
+    }
+
+
 def main():
+    artifact = {"rc_ratios": {}, "realizations": []}
     for head_dim in (64, 128):
+        c, r = 1.0, rc_ratio(head_dim)
+        artifact["rc_ratios"][str(head_dim)] = round(r, 4)
         for seq in (512, 2048, 8192):
             n = max(2, min(seq // 128, 64))
             m = 8
-            c, r = 1.0, rc_ratio(head_dim)
             for causal in (False, True):
                 us = _measure_ref_bwd(min(seq, 2048), head_dim, causal)
                 base = sim.simulate(S.fa3(n, m, causal), c, r).makespan
                 names = (["fa3", "descending", "symmetric_shift"] if causal
                          else ["fa3", "descending", "shift"])
                 for nm in names:
-                    sch = (S.fa3(n, m, causal) if nm == "fa3"
-                           else S.descending(n, m, causal) if nm == "descending"
-                           else S.make_schedule(nm, n, m, causal))
-                    res = sim.simulate(sch, c, r)
+                    res = sim.simulate(_sched(nm, n, m, causal), c, r)
                     print(f"kernel_bwd_{'causal' if causal else 'full'}"
                           f"_hd{head_dim}_s{seq}_{nm},{us:.1f},"
                           f"modeled_util={res.utilization:.3f}"
                           f";speedup={base / res.makespan:.3f}")
+                    if head_dim == 64:  # grid shape is head_dim-independent
+                        artifact["realizations"].append(
+                            grid_realizations(nm, n, causal, c, r))
+    json.dump(artifact, open(ART, "w"), indent=1)
+    print(f"kernel_bwd_artifact,0.0,wrote={os.path.basename(ART)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""CI gate: the causal flash-forward grid must contain ZERO fully-masked tiles.
+
+The schedule-driven forward (`repro.kernels.flash_fwd.causal_grid`) enumerates
+only tiles that intersect the causal mask; this check re-derives the valid set
+for a sweep of tilings and fails the build if the grid ever re-admits a masked
+tile (or drops a valid one, or stops iterating q descending). Run by CI:
+
+    PYTHONPATH=src python benchmarks/check_causal_grid.py
+"""
+import sys
+
+from repro.kernels.flash_fwd import causal_grid
+
+SWEEP = [
+    # (n_q, n_k, block_q, block_k)
+    (2, 2, 128, 128), (3, 3, 128, 128), (8, 8, 128, 128), (64, 64, 128, 128),
+    (4, 8, 128, 64), (8, 4, 64, 128), (16, 16, 256, 256),
+]
+
+
+def check(n_q, n_k, bq, bk):
+    kv_ids, q_ids, first, last = causal_grid(n_q, n_k, bq, bk)
+    tasks = list(zip(kv_ids.tolist(), q_ids.tolist()))
+    valid = {(ki, qi) for qi in range(n_q) for ki in range(n_k)
+             if ki * bk < (qi + 1) * bq}
+    masked = [t for t in tasks if t not in valid]
+    if masked:
+        return f"grid contains {len(masked)} fully-masked tiles: {masked[:4]}"
+    if set(tasks) != valid or len(tasks) != len(valid):
+        return "grid does not cover the valid tile set exactly once"
+    q_order = [q for i, q in enumerate(q_ids.tolist()) if first[i]]
+    if q_order != sorted(q_order, reverse=True):
+        return "q tiles not iterated descending"
+    dense = n_q * n_k
+    return None, len(tasks), dense
+
+
+def main() -> int:
+    failures = []
+    for cfg in SWEEP:
+        res = check(*cfg)
+        if isinstance(res, str):
+            failures.append((cfg, res))
+            print(f"FAIL {cfg}: {res}")
+        else:
+            _, n_tasks, dense = res
+            print(f"ok   n_q={cfg[0]:>3} n_k={cfg[1]:>3} bq={cfg[2]} bk={cfg[3]}"
+                  f": {n_tasks} tasks (dense grid: {dense}, "
+                  f"{dense - n_tasks} masked tiles removed)")
+    if failures:
+        print(f"{len(failures)} causal-grid check(s) failed", file=sys.stderr)
+        return 1
+    print("causal forward grid: zero fully-masked tiles across the sweep")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure. CSV: name,us_per_call,derived.
 
   bench_schedule_sim   Figs. 3/4/6/7 + §3 closed forms (DAG model)
-  bench_kernel_bwd     Figs. 8/9 backward throughput per schedule
+  bench_kernel_bwd     Figs. 8/9 backward throughput per schedule; writes
+                       BENCH_kernel_bwd.json (serialized vs worker-parallel
+                       grid realizations: steps, modeled makespan/utilization)
   bench_e2e_block      Fig. 10 end-to-end transformer-block speedup
   bench_determinism    Table 1 gradient-deviation
   bench_roofline       §Roofline terms from the dry-run artifacts (ours)

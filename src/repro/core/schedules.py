@@ -47,6 +47,7 @@ step order (:mod:`repro.dist.ring_attention`).  The schedule↔ring mapping is:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -78,6 +79,10 @@ class Schedule:
     n_heads: int
     chains: Tuple[Tuple[Task, ...], ...]
     reduction_order: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]]
+    # per-instance memo for derived kernel arrays (worker_chains / serialization);
+    # excluded from equality so two structurally equal schedules stay equal.
+    _memo: Dict = dataclasses.field(default_factory=dict, compare=False,
+                                    repr=False)
 
     # ---------------------------------------------------------------- helpers
     def valid_cells(self) -> set:
@@ -125,14 +130,80 @@ class Schedule:
         On TPU the Pallas grid executes sequentially on one core, so the n worker
         chains are serialized worker-major; contiguity of KV rows is preserved, which
         is what keeps the dK/dV accumulator VMEM-resident between grid steps.
+        Memoized on the instance (rebuilt kernels retrace per shape/dtype).
         """
-        kv_ids, q_ids = [], []
+        key = ("serialize", head)
+        if key not in self._memo:
+            kv_ids, q_ids = [], []
+            for chain in self.chains:
+                for (h, kv, q) in chain:
+                    if h == head:
+                        kv_ids.append(kv)
+                        q_ids.append(q)
+            self._memo[key] = (np.asarray(kv_ids, np.int32),
+                               np.asarray(q_ids, np.int32))
+        return self._memo[key]
+
+    def worker_chains(self, head: int = 0) -> Dict[str, np.ndarray]:
+        """Per-worker padded prefetch arrays for the worker-parallel backward.
+
+        The serialized realization (:meth:`prefetch_arrays`) plays all chains on
+        one sequential core; this emits the schedule's *parallel dimension*: a
+        ``(n_workers, max_chain_len)`` grid where each row is one worker's chain
+        for ``head``, padded at the tail with no-op **sentinel tasks**. A sentinel
+        repeats the worker's last valid ``(kv, q)`` so every BlockSpec index map
+        stays constant across the padding — no extra DMA is issued and the grid
+        step is a pure no-op under the ``valid`` guard.
+
+        Returns int32 arrays (all ``(W, T)`` unless noted):
+          ``kv_ids`` / ``q_ids``  task tile indices (sentinels repeat the last task)
+          ``valid``               1 for real tasks, 0 for sentinel padding
+          ``q_first``             1 iff the task is this worker's first visit to
+                                  its q column (fresh write vs read-modify-write
+                                  of the worker-private dQ partial)
+          ``visited``             ``(W, n_q)`` — 1 iff the worker contributes to
+                                  the q column at all (drives the combine mask)
+        plus ``single_visit`` (python bool): every worker touches each q column
+        at most once for this head. True for every registry generator at
+        ``n_heads=1``; it is the condition under which the parallel realization
+        is **bitwise identical** to the serialized one (the per-column reduction
+        degenerates to the same left fold in ascending worker order).
+        """
+        key = ("worker_chains", head)
+        if key in self._memo:
+            return self._memo[key]
+        per_worker: List[List[Tuple[int, int]]] = []
         for chain in self.chains:
-            for (h, kv, q) in chain:
-                if h == head:
-                    kv_ids.append(kv)
-                    q_ids.append(q)
-        return (np.asarray(kv_ids, np.int32), np.asarray(q_ids, np.int32))
+            per_worker.append([(kv, q) for (h, kv, q) in chain if h == head])
+        if any(len(c) == 0 for c in per_worker):
+            raise ValueError(
+                f"schedule {self.name!r}: empty worker chain for head {head} — "
+                "the worker-parallel grid needs every worker to own a KV row")
+        W = self.n_workers
+        T = max(len(c) for c in per_worker)
+        kv_ids = np.zeros((W, T), np.int32)
+        q_ids = np.zeros((W, T), np.int32)
+        valid = np.zeros((W, T), np.int32)
+        q_first = np.zeros((W, T), np.int32)
+        visited = np.zeros((W, self.n_q), np.int32)
+        single_visit = True
+        for w, tasks in enumerate(per_worker):
+            seen_q = set()
+            for t in range(T):
+                kv, q = tasks[min(t, len(tasks) - 1)]
+                kv_ids[w, t], q_ids[w, t] = kv, q
+                if t < len(tasks):
+                    valid[w, t] = 1
+                    if q not in seen_q:
+                        q_first[w, t] = 1
+                        seen_q.add(q)
+                    else:
+                        single_visit = False
+                    visited[w, q] = 1
+        out = dict(kv_ids=kv_ids, q_ids=q_ids, valid=valid, q_first=q_first,
+                   visited=visited, single_visit=single_visit)
+        self._memo[key] = out
+        return out
 
     def worker_slots(self) -> Dict[Task, Tuple[int, int]]:
         """task -> (worker, position in chain)."""
@@ -316,3 +387,17 @@ def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
                              "use shift for full masks (paper §3.4)")
         return symmetric_shift(n, n_heads)
     raise KeyError(f"unknown schedule {name!r}; available: {sorted(GENERATORS)}")
+
+
+@functools.lru_cache(maxsize=256)
+def cached_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
+                    n_q: int | None = None) -> Schedule:
+    """Memoized :func:`make_schedule` keyed by
+    ``(name, n_kv=n_workers=n, n_q, n_heads, causal)``.
+
+    Schedule construction + serialization is pure-python and runs on every
+    kernel trace (``ops._bwd_rule`` retraces per shape/dtype combination);
+    reusing one instance also shares the derived kernel arrays memoized on it
+    (:meth:`Schedule.worker_chains`, ``flash_bwd.serialize_schedule``).
+    """
+    return make_schedule(name, n, n_heads=n_heads, causal=causal, n_q=n_q)

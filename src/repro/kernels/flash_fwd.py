@@ -1,31 +1,103 @@
 """Flash-attention forward Pallas TPU kernel.
 
-Standard online-softmax tiling (FlashAttention dataflow adapted to the TPU memory
-hierarchy): grid = (batch·heads, q_tiles, kv_tiles) with the kv dimension innermost
-and "arbitrary" (sequential) so the running (max, sum, acc) state lives in VMEM
-scratch across kv steps; q/k/v tiles stream HBM→VMEM via BlockSpecs sized for the
-MXU (block 128×head_dim).  Causal masking skips fully-masked kv tiles with
-``pl.when`` (the DASH *backward* kernel goes further and removes them from the grid
-entirely via schedule-driven scalar prefetch — see flash_bwd.py).
+Online-softmax tiling (FlashAttention dataflow adapted to the TPU memory
+hierarchy). Two grids:
+
+* **Full mask** — dense ``grid = (batch·heads, q_tiles, kv_tiles)`` with the kv
+  dimension innermost and "arbitrary" (sequential) so the running (max, sum,
+  acc) state lives in VMEM scratch across kv steps.
+* **Causal mask** — the dense grid would waste ~half its steps on fully-masked
+  kv tiles (previously skipped with ``pl.when``, but still burning grid
+  bookkeeping and DMAs for the q/o/lse blocks of dead steps). Instead the grid
+  is **schedule-driven** like the DASH backward: scalar-prefetch arrays
+  enumerate only the valid ``(q_tile, kv_tile)`` tasks — masked tiles are
+  removed from the grid entirely — with **descending q-tile iteration**
+  (longest rows first, the §3.3 traversal, so the tail of the grid drains with
+  the shortest rows). ``causal_grid()`` exposes the task list; CI asserts it
+  contains zero fully-masked tiles.
+
+K/V are addressed **natively for GQA** — ``(B·Hk, S, D)``, never repeated to
+the query head count: K/V index maps resolve the program's KV head via
+:func:`repro.kernels.gqa.kv_head_index`.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 if not hasattr(pltpu, "CompilerParams"):      # named TPUCompilerParams on jax 0.4.x
     pltpu.CompilerParams = pltpu.TPUCompilerParams
 
+from repro.kernels.gqa import kv_head_index
+
 NEG_INF = -1e30
 
 
+# --------------------------------------------------------------------------- #
+# causal task grid (schedule-driven: no masked tiles, descending q)
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=256)
+def causal_grid(n_q: int, n_k: int, block_q: int, block_k: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(kv_ids, q_ids, first, last) int32 task arrays for the causal forward.
+
+    Tasks visit q tiles in **descending** order; within a q tile, kv ascends
+    (the online-softmax chain). Only tiles with at least one unmasked element —
+    ``kv·block_k < (q+1)·block_q`` — are emitted, so the grid contains zero
+    fully-masked tiles by construction. ``first``/``last`` flag each q tile's
+    chain boundaries (scratch init / finalize).
+    """
+    kv_ids, q_ids, first, last = [], [], [], []
+    for qi in range(n_q - 1, -1, -1):
+        n_valid = min(n_k, -(-((qi + 1) * block_q) // block_k))
+        for ki in range(n_valid):
+            kv_ids.append(ki)
+            q_ids.append(qi)
+            first.append(1 if ki == 0 else 0)
+            last.append(1 if ki == n_valid - 1 else 0)
+    return (np.asarray(kv_ids, np.int32), np.asarray(q_ids, np.int32),
+            np.asarray(first, np.int32), np.asarray(last, np.int32))
+
+
+def _fwd_body(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *, sm_scale, causal,
+              q_start, k_start):
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if causal:
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)[:, None]
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+
+def _finalize(o_ref, lse_ref, acc_ref, m_ref, l_ref):
+    l = l_ref[...]
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+    lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                acc_ref, m_ref, l_ref, *, sm_scale, causal, block_q, block_k,
+                acc_ref, m_ref, l_ref, *, sm_scale, block_q, block_k,
                 n_kv_tiles):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -36,85 +108,131 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q_start = qi * block_q
-    k_start = ki * block_k
-
-    def _body():
-        q = q_ref[0].astype(jnp.float32)
-        k = k_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * sm_scale
-        if causal:
-            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(rows >= cols, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_cur = jnp.max(s, axis=-1)[:, None]
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)[:, None]
-        v = v_ref[0].astype(jnp.float32)
-        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = m_new
-
-    if causal:
-        # skip fully-masked kv tiles (diagonal block is partially masked, still runs)
-        pl.when(k_start <= q_start + block_q - 1)(_body)
-    else:
-        _body()
+    _fwd_body(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, sm_scale=sm_scale,
+              causal=False, q_start=qi * block_q, k_start=ki * block_k)
 
     @pl.when(ki == n_kv_tiles - 1)
-    def _finalize():
-        l = l_ref[...]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
-        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+    def _fin():
+        _finalize(o_ref, lse_ref, acc_ref, m_ref, l_ref)
+
+
+def _fwd_sched_kernel(kv_ids, q_ids, first, last,      # scalar prefetch (SMEM)
+                      q_ref, k_ref, v_ref, o_ref, lse_ref,
+                      acc_ref, m_ref, l_ref, *, sm_scale, block_q, block_k):
+    t = pl.program_id(1)
+    qi = q_ids[t]
+    ki = kv_ids[t]
+
+    @pl.when(first[t] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    _fwd_body(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, sm_scale=sm_scale,
+              causal=True, q_start=qi * block_q, k_start=ki * block_k)
+
+    @pl.when(last[t] == 1)
+    def _fin():
+        _finalize(o_ref, lse_ref, acc_ref, m_ref, l_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "n_heads", "n_kv_heads"))
 def flash_fwd(q, k, v, causal=False, sm_scale=None, block_q=128, block_k=128,
-              interpret=False):
+              interpret=False, n_heads: Optional[int] = None,
+              n_kv_heads: Optional[int] = None):
     """Flash attention forward.
 
-    Args:   q, k, v: (BH, S, D); S divisible by the block sizes.
+    Args:   q: (BH, S, D); k, v: (B·Hk, S, D) — pass ``n_heads``/``n_kv_heads``
+            when the head counts differ (native GQA; no KV repetition).
+            S divisible by the block sizes.
     Returns: out (BH, S, D) q.dtype, lse (BH, S) fp32.
     """
     bh, sq, d = q.shape
     sk = k.shape[1]
+    if n_heads is None or n_kv_heads is None:
+        assert k.shape[0] == bh, ("k/v have fewer heads than q: pass n_heads "
+                                  "and n_kv_heads for native GQA")
+        n_heads = n_kv_heads = 1
+    assert bh % n_heads == 0 and k.shape[0] == (bh // n_heads) * n_kv_heads, (
+        f"flattened shapes {bh}x{k.shape[0]} inconsistent with heads "
+        f"{n_heads}/{n_kv_heads}")
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
+    # causal attention is square-only here: the repo's causal convention for
+    # sq != sk is end-aligned (ref._mask / xla_attention), while this kernel's
+    # mask and causal_grid() are start-aligned — refuse rather than silently
+    # diverge (the DASH causal schedules are square anyway).
+    assert not causal or sq == sk, "causal flash_fwd requires sq == sk"
     n_q, n_k = sq // block_q, sk // block_k
     assert sq % block_q == 0 and sk % block_k == 0
+    kvb = functools.partial(kv_head_index, n_heads=n_heads,
+                            n_kv_heads=n_kv_heads)
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+        pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+    ]
+
+    if causal:
+        kv_ids, q_ids, first, last = causal_grid(n_q, n_k, block_q, block_k)
+        kernel = functools.partial(
+            _fwd_sched_kernel, sm_scale=sm_scale, block_q=block_q,
+            block_k=block_k)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(bh, int(kv_ids.shape[0])),
+            in_specs=[
+                pl.BlockSpec((1, block_q, d),
+                             lambda b, t, kvi, qi, fi, la: (b, qi[t], 0)),
+                pl.BlockSpec((1, block_k, d),
+                             lambda b, t, kvi, qi, fi, la: (kvb(b), kvi[t], 0)),
+                pl.BlockSpec((1, block_k, d),
+                             lambda b, t, kvi, qi, fi, la: (kvb(b), kvi[t], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_q, d),
+                             lambda b, t, kvi, qi, fi, la: (b, qi[t], 0)),
+                pl.BlockSpec((1, block_q),
+                             lambda b, t, kvi, qi, fi, la: (b, qi[t])),
+            ],
+            scratch_shapes=scratch_shapes,
+        )
+        out, lse = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+            interpret=interpret,
+        )(jnp.asarray(kv_ids), jnp.asarray(q_ids), jnp.asarray(first),
+          jnp.asarray(last), q, k, v)
+        return out, lse
 
     grid = (bh, n_q, n_k)
     kernel = functools.partial(
-        _fwd_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        _fwd_kernel, sm_scale=sm_scale, block_q=block_q,
         block_k=block_k, n_kv_tiles=n_k)
     out, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (kvb(b), ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (kvb(b), ki, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
             pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, d), jnp.float32),   # acc
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
-        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -9,8 +9,11 @@ is the model-facing dispatcher:
                    obscure cost_analysis and explode CPU compile times);
   impl="pallas"  — the DASH kernels (TARGET: TPU; validated via interpret=True).
 
-Public shapes are (batch, heads, seq, head_dim); GQA is handled by repeating KV
-heads up to the query head count before the kernel (TPU kernels see (B·H, S, D)).
+Public shapes are (batch, heads, seq, head_dim). GQA is **native** on both
+paths: K/V keep their (batch, kv_heads, seq, head_dim) shape end to end — no
+``jnp.repeat`` materialization, group-factor less KV residual memory — and the
+kernels/einsums address KV by ``query_head // group``. dK/dV reduce per KV head
+in ascending query-head order (fixed-order fold; deterministic).
 """
 from __future__ import annotations
 
@@ -21,10 +24,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedules import Schedule, make_schedule
+from repro.core.schedules import Schedule, cached_schedule, make_schedule
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_bwd import flash_bwd
 from repro.kernels.flash_fwd import flash_fwd
+from repro.kernels.gqa import validate_group
 
 
 def _flatten(x):  # (B, H, S, D) -> (BH, S, D)
@@ -44,23 +48,35 @@ def _dash_attention(q, k, v, causal, schedule_name, sm_scale, block, interpret):
 
 
 def _fwd_impl(q, k, v, causal, sm_scale, block, interpret):
-    return flash_fwd(q, k, v, causal=causal, sm_scale=sm_scale,
-                     block_q=block, block_k=block, interpret=interpret)
+    """q (B,H,S,D), k/v (B,Hk,S,D) — flattened here, never head-repeated."""
+    b, h = q.shape[0], q.shape[1]
+    out, lse = flash_fwd(_flatten(q), _flatten(k), _flatten(v), causal=causal,
+                         sm_scale=sm_scale, block_q=block, block_k=block,
+                         interpret=interpret, n_heads=h, n_kv_heads=k.shape[1])
+    return _unflatten(out, b, h), lse
 
 
 def _fwd_rule(q, k, v, causal, schedule_name, sm_scale, block, interpret):
     out, lse = _fwd_impl(q, k, v, causal, sm_scale, block, interpret)
+    # residuals keep K/V at Hk heads: group-factor less residual memory vs the
+    # old repeat-to-H path.
     return out, (q, k, v, out, lse)
 
 
 def _bwd_rule(causal, schedule_name, sm_scale, block, interpret, res, do):
     q, k, v, out, lse = res
-    n = q.shape[1] // block
-    schedule = make_schedule(schedule_name, n, n_heads=1, causal=causal)
-    dq, dk, dv = flash_bwd(q, k, v, out, lse, do, schedule, causal=causal,
-                           sm_scale=sm_scale, block_q=block, block_k=block,
-                           interpret=interpret)
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    b, h = q.shape[0], q.shape[1]
+    hk = k.shape[1]
+    n = q.shape[2] // block
+    schedule = cached_schedule(schedule_name, n, n_heads=1, causal=causal)
+    dq, dk, dv = flash_bwd(_flatten(q), _flatten(k), _flatten(v),
+                           _flatten(out), lse, _flatten(do), schedule,
+                           causal=causal, sm_scale=sm_scale, block_q=block,
+                           block_k=block, interpret=interpret,
+                           n_heads=h, n_kv_heads=hk)
+    return (_unflatten(dq, b, h).astype(q.dtype),
+            _unflatten(dk, b, hk).astype(k.dtype),
+            _unflatten(dv, b, hk).astype(v.dtype))
 
 
 _dash_attention.defvjp(_fwd_rule, _bwd_rule)
@@ -73,7 +89,8 @@ def dash_attention(q, k, v, causal: bool = False,
     """DASH attention with deterministic scheduled backward.
 
     Args:
-      q, k, v: (B, H, S, D) (kv heads may be fewer — repeated for GQA).
+      q: (B, H, S, D); k, v: (B, Hk, S, D) with H a multiple of Hk (native GQA —
+        KV heads are addressed by group, never repeated).
       causal: mask.
       schedule: "fa3" | "descending" | "shift" | "symmetric_shift" |
         "symmetric_shift_or_shift" (pick the paper-optimal one for the mask).
@@ -81,23 +98,30 @@ def dash_attention(q, k, v, causal: bool = False,
     Returns: (B, H, S, D) attention output.
     """
     b, h, s, d = q.shape
-    hk = k.shape[1]
-    if hk != h:
-        assert h % hk == 0
-        k = jnp.repeat(k, h // hk, axis=1)
-        v = jnp.repeat(v, h // hk, axis=1)
+    validate_group(h, k.shape[1])
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
     if schedule == "symmetric_shift_or_shift":
         schedule = "symmetric_shift" if causal else "shift"
-    out = _dash_attention(_flatten(q), _flatten(k), _flatten(v), causal,
-                          schedule, sm_scale, block, interpret)
-    return _unflatten(out, b, h)
+    return _dash_attention(q, k, v, causal, schedule, sm_scale, block,
+                           interpret)
+
+
+def _grouped_logits_mask(logits, causal):
+    if not causal:
+        return logits
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    return jnp.where((qpos[:, None] >= kpos[None, :] + sq - sk), logits, -1e30)
 
 
 def xla_attention(q, k, v, causal: bool = False, sm_scale: Optional[float] = None,
                   chunk_q: Optional[int] = None):
     """Reference jnp attention (B, H, S, D) — differentiable, deterministic on TPU.
+
+    GQA-native: k/v may carry Hk < H heads; the einsums contract per KV-head
+    group (``bkgqd,bksd->bkgqs``) instead of repeating K/V.
 
     ``chunk_q``: scan over query chunks so the (B,H,S,S) score matrix is never
     materialized — peak temp drops from O(S²) to O(S·chunk). Identical math and
@@ -105,32 +129,58 @@ def xla_attention(q, k, v, causal: bool = False, sm_scale: Optional[float] = Non
     """
     b, h, s, d = q.shape
     hk = k.shape[1]
-    if hk != h:
-        k = jnp.repeat(k, h // hk, axis=1)
-        v = jnp.repeat(v, h // hk, axis=1)
+    g = validate_group(h, hk)
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
-    if not chunk_q or s <= chunk_q or s % chunk_q:
-        out, _ = ref_mod.mha_fwd(_flatten(q), _flatten(k), _flatten(v), causal,
-                                 sm_scale)
-        return _unflatten(out, b, h)
 
+    if g == 1:
+        if not chunk_q or s <= chunk_q or s % chunk_q:
+            out, _ = ref_mod.mha_fwd(_flatten(q), _flatten(k), _flatten(v),
+                                     causal, sm_scale)
+            return _unflatten(out, b, h)
+        return _chunked(q, k, v, causal, sm_scale, chunk_q,
+                        "bhqd,bhkd->bhqk", "bhqk,bhkd->bhqd")
+
+    qg = q.reshape(b, hk, g, s, d)
+    if not chunk_q or s <= chunk_q or s % chunk_q:
+        logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * sm_scale
+        logits = _grouped_logits_mask(logits, causal)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+        return out.reshape(b, h, s, d).astype(q.dtype)
+    out = _chunked(qg, k, v, causal, sm_scale, chunk_q,
+                   "bkgqd,bksd->bkgqs", "bkgqs,bksd->bkgqd")
+    return out.reshape(b, h, s, d)
+
+
+def _chunked(q, k, v, causal, sm_scale, chunk_q, score_eq, out_eq):
+    """Query-chunked attention scan shared by the flat and grouped GQA paths.
+
+    q: (..., S, D) with leading batch/head(/group) axes named by the einsum
+    equations; k/v: (B, Hk|H, S, D).
+    """
+    s = q.shape[-2]
     nc = s // chunk_q
-    qc = q.reshape(b, h, nc, chunk_q, d).transpose(2, 0, 1, 3, 4)
+    lead = q.shape[:-2]
+    qc = q.reshape(lead + (nc, chunk_q, q.shape[-1]))
+    qc = jnp.moveaxis(qc, -3, 0)                       # (nc, ..., chunk, d)
     offsets = jnp.arange(nc) * chunk_q
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
-    kpos = jnp.arange(s)
+    kpos = jnp.arange(k.shape[-2])
 
     def one_chunk(carry, qc_off):
         qch, off = qc_off
-        logits = jnp.einsum("bhqd,bhkd->bhqk", qch.astype(jnp.float32),
-                            kf) * sm_scale
+        logits = jnp.einsum(score_eq, qch.astype(jnp.float32), kf) * sm_scale
         if causal:
-            qpos = off + jnp.arange(chunk_q)
-            logits = jnp.where((qpos[:, None] >= kpos[None, :])[None, None],
-                               logits, -1e30)
+            # end-aligned causal convention (matches ref._mask's tril(k=sk-sq)
+            # and _grouped_logits_mask): query i may see keys ≤ i + sk - sq.
+            qpos = off + jnp.arange(chunk_q) + (k.shape[-2] - s)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask.reshape((1,) * (logits.ndim - 2)
+                                            + mask.shape), logits, -1e30)
         w = jax.nn.softmax(logits, axis=-1)
-        o = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+        o = jnp.einsum(out_eq, w, vf)
         return carry, o.astype(q.dtype)
 
     # remat per chunk: the backward recomputes one chunk's scores at a time
@@ -139,14 +189,20 @@ def xla_attention(q, k, v, causal: bool = False, sm_scale: Optional[float] = Non
     # counted once) and lets the TPU scheduler software-pipeline the chunks.
     _, out = jax.lax.scan(jax.checkpoint(one_chunk), (), (qc, offsets),
                           unroll=True)
-    return out.transpose(1, 2, 0, 3, 4).reshape(b, h, s, d)
+    out = jnp.moveaxis(out, 0, -3)                     # (..., nc, chunk, d)
+    return out.reshape(lead + (s, q.shape[-1]))
 
 
 def attention(q, k, v, causal: bool = False, impl: str = "xla",
               schedule: str = "symmetric_shift_or_shift",
               sm_scale: Optional[float] = None, interpret: bool = False,
               chunk_q: Optional[int] = None):
-    """Model-facing dispatcher; see module docstring."""
+    """Model-facing dispatcher; see module docstring.
+
+    Validates GQA group divisibility up front: q carries ``n_heads`` heads, k/v
+    carry ``n_kv_heads`` — the former must be a multiple of the latter.
+    """
+    validate_group(q.shape[1], k.shape[1])
     if impl == "xla":
         return xla_attention(q, k, v, causal, sm_scale, chunk_q=chunk_q)
     if impl == "pallas":

@@ -4,6 +4,9 @@ cross), MLP variants. Pure functions over ParamDef-declared pytrees.
 All matmuls run with fp32 accumulation (`preferred_element_type`); activations are
 annotated with logical sharding axes via :func:`repro.dist.sharding.shard` so the
 same model code lowers correctly under every rule set (TP / FSDP+TP / CP).
+GQA runs native on every path: K/V tensors (and KV caches/pools) keep
+``n_kv_heads`` heads — the attention ops group query heads instead of repeating
+K/V, so llama4/qwen/nemotron-style configs pay no replication tax in HBM.
 """
 from __future__ import annotations
 
@@ -103,6 +106,11 @@ def _project_qkv(p, xq, xkv, cfg, q_pos, kv_pos, use_rope=True):
 
 def _sdpa_full(q, k, v, cfg, causal):
     """(B,S,H,D)x(B,S,Hk,D) -> (B,S,H,D); dispatches to the configured impl.
+
+    K/V stay at Hk heads end to end — both attention impls are GQA-native
+    (kernel index maps / grouped einsums address KV by ``head // group``), so
+    the group factor is saved in residuals, and the seq-shard all-gather below
+    moves Hk/H of the bytes the old repeat-to-H path did.
 
     When the head count does not divide the model axis (shard_heads=False:
     llama4's 40, internvl's 14, whisper's 8 heads on tp=16), attention compute
