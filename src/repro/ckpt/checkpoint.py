@@ -1,27 +1,69 @@
 """Sharded, async, elastic checkpointing (no orbax dependency).
 
 Layout:  <dir>/step_<k>/arrays.npz  +  manifest.json  (tree structure, shapes,
-dtypes, step). Writes go to a temp dir renamed into place — a crashed save never
-corrupts the latest checkpoint (manifest-last + atomic rename), which is the
-restore-safety contract for preemption-heavy fleets.
+dtypes, per-leaf digests, step). Writes go to a temp dir renamed into place — a
+crashed save never corrupts the latest checkpoint (manifest-last + atomic
+rename), which is the restore-safety contract for preemption-heavy fleets.
+
+Bitwise conformance: the manifest records each leaf's **original** dtype and
+its ``repro.verify.digest`` sha256 *before* any storage upcast (npz has no
+bf16, so bf16 leaves are stored as their lossless f32 upcast). ``restore``
+validates the target tree's dtypes against the manifest — a silently-casting
+restore is how determinism claims rot — and re-verifies every leaf digest
+after the round trip, so corruption or a lossy cast fails loudly.
 
 Elasticity: arrays are saved as *global* (fully-gathered) values; ``restore``
 re-shards onto whatever mesh/sharding the restoring job provides — a different
-pod count or rule set re-shards transparently (tested in test_fault_tolerance).
-At 100B+ scale you'd write per-shard files; the manifest format already records
-per-array shapes so that extension is additive.
+pod count or rule set re-shards transparently (tested in test_fault_tolerance
+and verify/lifecycle's elastic scenario). At 100B+ scale you'd write per-shard
+files; the manifest format already records per-array shapes so that extension
+is additive.
+
+Crash-safety: a failed save removes its temp dir and never publishes; ``_gc``
+skips any checkpoint a concurrent ``restore`` is reading (in-process read
+guard), so keep_last pruning cannot yank a checkpoint mid-restore.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.verify import digest as D
+
+FORMAT_VERSION = 2
+
+# how long a same-step overwrite save waits for a concurrent restore's read
+# pin before FAILING the save (it never breaks the reader)
+_PUBLISH_PIN_TIMEOUT = 60.0
+
+# (directory, step) → reader count for restores in flight — _gc and same-step
+# overwrites must not delete these out from under them. A count (not a set)
+# so overlapping readers of the same step each hold their own pin.
+_READS_LOCK = threading.Lock()
+_ACTIVE_READS: Dict[Any, int] = {}
+
+
+@contextlib.contextmanager
+def _reading(directory: str, step: int):
+    key = (os.path.abspath(directory), int(step))
+    with _READS_LOCK:
+        _ACTIVE_READS[key] = _ACTIVE_READS.get(key, 0) + 1
+    try:
+        yield
+    finally:
+        with _READS_LOCK:
+            _ACTIVE_READS[key] -= 1
+            if not _ACTIVE_READS[key]:
+                del _ACTIVE_READS[key]
 
 
 def _flatten_with_paths(tree):
@@ -37,32 +79,71 @@ def save(directory: str, step: int, tree, *, async_: bool = False,
          keep_last: int = 3):
     """Checkpoint `tree` at `step`. async_=True returns a Thread (join to wait)."""
     def to_numpy(x):
-        a = np.asarray(jax.device_get(x))
-        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
-            a = a.astype(np.float32)   # npz has no bf16; f32 upcast is lossless
-        return a
+        return np.asarray(jax.device_get(x))
 
+    # the device→host snapshot is the only work on the caller thread; hashing
+    # and the bf16→f32 storage upcast happen in the (possibly async) writer
     gathered = jax.tree.map(to_numpy, tree)
 
     def _write():
+        flat = _flatten_with_paths(gathered)
+        # digests + dtypes of the *original* values, before any storage upcast
+        digests = {k: D.leaf_digest(v) for k, v in flat.items()}
+
+        def to_storage(a):
+            if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                return a.astype(np.float32)   # npz has no bf16; f32 lossless
+            return a
+
+        stored = {k: to_storage(v) for k, v in flat.items()}
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "step": step,
+            "treedef": str(jax.tree.structure(gathered)),
+            "tree_digest": D.combine_leaf_digests(digests),
+            "arrays": {k: {"shape": list(flat[k].shape),
+                           "dtype": str(flat[k].dtype),  # original dtype
+                           "stored_dtype": str(stored[k].dtype),
+                           "digest": digests[k]}
+                       for k in flat},
+        }
         tmp = os.path.join(directory, f".tmp_step_{step}")
         final = os.path.join(directory, f"step_{step}")
-        os.makedirs(tmp, exist_ok=True)
-        flat = _flatten_with_paths(gathered)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k: v for k, v in flat.items()})
-        treedef = jax.tree.structure(gathered)
-        manifest = {
-            "step": step,
-            "treedef": str(treedef),
-            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for k, v in flat.items()},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)                      # manifest last
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)                           # atomic publish
+        try:
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)                  # manifest last
+            # publish under the read guard: a same-step overwrite must not
+            # delete the directory out from under a concurrent restore — wait
+            # for its pin. If a reader wedges past the timeout the SAVE fails
+            # (tmp cleaned, nothing published, durable latest untouched); the
+            # reader's pin is never broken. rmtree of the displaced old dir
+            # happens outside the lock (rename is the only op held under it).
+            key = (os.path.abspath(directory), int(step))
+            deadline = time.monotonic() + _PUBLISH_PIN_TIMEOUT
+            displaced = None
+            while True:
+                with _READS_LOCK:
+                    if key not in _ACTIVE_READS:
+                        if os.path.exists(final):
+                            displaced = os.path.join(
+                                directory,
+                                f".trash_step_{step}_{time.monotonic_ns()}")
+                            os.rename(final, displaced)
+                        os.rename(tmp, final)           # atomic publish
+                        break
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"save(step={step}): a concurrent restore held its "
+                        f"read pin > {_PUBLISH_PIN_TIMEOUT}s; checkpoint not "
+                        "published")
+                time.sleep(0.005)
+            if displaced is not None:
+                shutil.rmtree(displaced, ignore_errors=True)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)      # never leave a torn tmp
+            raise
         _gc(directory, keep_last)
 
     if async_:
@@ -75,8 +156,24 @@ def save(directory: str, step: int, tree, *, async_: bool = False,
 
 def _gc(directory: str, keep_last: int):
     steps = sorted(available_steps(directory))
+    trash = []
     for s in steps[:-keep_last]:
-        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+        # pin-check and *rename* under one lock (microseconds): a restore
+        # either registered its pin before we got here (skip) or finds the
+        # step already fully renamed away (clean FileNotFoundError) — never
+        # a mid-read deletion. The slow rmtree runs outside the lock.
+        with _READS_LOCK:
+            if (os.path.abspath(directory), s) in _ACTIVE_READS:
+                continue
+            dst = os.path.join(directory,
+                               f".trash_step_{s}_{time.monotonic_ns()}")
+            try:
+                os.rename(os.path.join(directory, f"step_{s}"), dst)
+            except OSError:
+                continue
+        trash.append(dst)
+    for dst in trash:
+        shutil.rmtree(dst, ignore_errors=True)
 
 
 def available_steps(directory: str):
@@ -95,23 +192,61 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, step: int, target_tree, *, shardings=None):
+def read_manifest(directory: str, step: int) -> Dict[str, Any]:
+    with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore(directory: str, step: int, target_tree, *, shardings=None,
+            verify: bool = True):
     """Restore into the structure of `target_tree`; optionally re-shard each leaf
-    with `shardings` (same tree structure of NamedSharding) — the elastic path."""
-    path = os.path.join(directory, f"step_{step}")
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        flat_keys = _flatten_with_paths(target_tree).keys()
-        arrays = {k: data[k] for k in flat_keys}
-    leaves, treedef = jax.tree.flatten(target_tree)
-    keys = list(_flatten_with_paths(target_tree).keys())
-    restored = []
-    flat_shardings = (treedef.flatten_up_to(shardings) if shardings is not None
-                      else [None] * len(leaves))
-    for key, ref, sh in zip(keys, leaves, flat_shardings):
-        arr = arrays[key]
-        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
-        x = jnp.asarray(arr).astype(ref.dtype)  # f32→bf16 restores saved bits
-        if sh is not None:
-            x = jax.device_put(x, sh)
-        restored.append(x)
-    return treedef.unflatten(restored)
+    with `shardings` (same tree structure of NamedSharding) — the elastic path.
+
+    The manifest's recorded (original) dtypes are authoritative: a target leaf
+    whose dtype disagrees raises instead of silently casting, and with
+    ``verify=True`` every leaf's digest is re-checked after the storage round
+    trip (bf16 → f32 → bf16 must reproduce the saved bits exactly).
+    """
+    with _reading(directory, step):
+        path = os.path.join(directory, f"step_{step}")
+        manifest = read_manifest(directory, step)
+        # v1 manifests recorded the *post-upcast* (storage) dtype for bf16
+        # leaves, so their "dtype" field cannot be validated against targets.
+        entries = (manifest.get("arrays", {})
+                   if manifest.get("format_version", 1) >= 2 else {})
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat_keys = _flatten_with_paths(target_tree).keys()
+            arrays = {k: data[k] for k in flat_keys}
+        leaves, treedef = jax.tree.flatten(target_tree)
+        keys = list(_flatten_with_paths(target_tree).keys())
+        restored = []
+        flat_shardings = (treedef.flatten_up_to(shardings)
+                          if shardings is not None else [None] * len(leaves))
+        for key, ref, sh in zip(keys, leaves, flat_shardings):
+            arr = arrays[key]
+            assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+            entry = entries.get(key, {})
+            saved_dtype = entry.get("dtype")        # None for v1 manifests
+            if saved_dtype is not None and saved_dtype != str(
+                    jnp.dtype(ref.dtype)):
+                raise ValueError(
+                    f"checkpoint dtype mismatch for '{key}': saved "
+                    f"{saved_dtype}, target expects {ref.dtype} — refusing "
+                    "to cast silently (pass a target tree with the saved "
+                    "dtypes, then cast explicitly)")
+            # downcast on host (ml_dtypes handles bf16): f32→bf16 restores
+            # the saved bits, and the digest check hashes host memory without
+            # a device round trip
+            host = arr.astype(np.dtype(ref.dtype))
+            if verify and entry.get("digest"):
+                got = D.leaf_digest(host)
+                if got != entry["digest"]:
+                    raise ValueError(
+                        f"checkpoint digest mismatch for '{key}' at step "
+                        f"{step}: manifest {entry['digest'][:16]}…, restored "
+                        f"{got[:16]}… — corrupted or lossy round trip")
+            x = jnp.asarray(host)
+            if sh is not None:
+                x = jax.device_put(x, sh)
+            restored.append(x)
+        return treedef.unflatten(restored)

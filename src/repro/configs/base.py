@@ -61,6 +61,10 @@ class ModelConfig:
     dtype_name: str = "bfloat16"
     vocab_pad: int = 2048                   # pad vocab to multiple of tp*128
     scan_unroll: bool = False               # unroll the layer scan (cost probes)
+    det_embed_grad: bool = True    # embedding bwd as pinned one-hot matmul
+                                   # (no unordered scatter-add); False restores
+                                   # the gather-grad scatter — flagged by
+                                   # repro.verify.trace
 
     @property
     def head_dim(self) -> int:

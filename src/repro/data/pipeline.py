@@ -10,6 +10,22 @@ Two sources:
   * SyntheticLM — threefry-keyed random tokens (smoke/e2e tests, benchmarks);
   * MemmapCorpus — a flat binary token file; windows are drawn by a threefry
     permutation over window starts (deterministic shuffling, no replay state).
+
+Both sources draw one **global** batch per step and slice the host's rows out
+of it, so any host split of the same global batch concatenates back to the
+identical token stream — the elastic-reshard invariant the lifecycle
+conformance suite asserts by digest (``repro.verify.digest.batch_digest``).
+
+DATA_STREAM_VERSION history:
+  1 — MemmapCorpus drew an O(step)-sized index array every step
+      (``batch*(step+1)`` randints, constant fold_in(0) key) and SyntheticLM
+      folded host_index into the key (host splits were disjoint streams, not
+      slices of a global batch).
+  2 — constant-size per-step draws with ``step`` folded into the key.  Step-0
+      streams are bitwise identical to v1 (same key, same shape); for
+      step > 0 the MemmapCorpus stream differs from v1 (documented,
+      versioned change), and SyntheticLM host slices now partition the
+      host_count=1 global stream (which is itself unchanged from v1).
 """
 from __future__ import annotations
 
@@ -19,6 +35,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+DATA_STREAM_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,9 +58,13 @@ class SyntheticLM:
         c = self.cfg
         per_host = c.batch // c.host_count
         key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
-        key = jax.random.fold_in(key, c.host_index)
-        toks = jax.random.randint(key, (per_host, c.seq + 1), 0, c.vocab,
+        # constant 0 fold keeps the host_count=1 stream bitwise at v1; the
+        # global draw makes host slices a partition of one global batch.
+        key = jax.random.fold_in(key, 0)
+        toks = jax.random.randint(key, (c.batch, c.seq + 1), 0, c.vocab,
                                   jnp.int32)
+        h0 = c.host_index * per_host
+        toks = toks[h0:h0 + per_host]
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
@@ -55,13 +77,14 @@ class MemmapCorpus:
     def batch(self, step: int) -> Dict[str, jax.Array]:
         c = self.cfg
         per_host = c.batch // c.host_count
-        # global batch indices for this step; host takes its contiguous slice
-        g0 = step * c.batch + c.host_index * per_host
-        key = jax.random.PRNGKey(c.seed)
-        idx = jax.random.randint(jax.random.fold_in(key, 0),
-                                 (c.batch * (step + 1),), 0, self.n_windows,
+        # one constant-size global draw per step (v2: step folded into the
+        # key instead of an O(step)-sized prefix draw); host takes its
+        # contiguous slice of the global batch
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        idx = jax.random.randint(key, (c.batch,), 0, self.n_windows,
                                  jnp.uint32)  # deterministic stream
-        starts = np.asarray(idx[g0:g0 + per_host]) * c.seq
+        h0 = c.host_index * per_host
+        starts = np.asarray(idx[h0:h0 + per_host]) * c.seq
         rows = np.stack([self.data[s:s + c.seq + 1].astype(np.int32)
                          for s in starts])
         return {"tokens": jnp.asarray(rows[:, :-1]),

@@ -51,6 +51,16 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--die-at-step", type=int, default=None,
                     help="simulate a hard failure (fault-tolerance demo)")
+    ap.add_argument("--verify", action="store_true",
+                    help="audit the lowered step for nondeterminism-prone "
+                         "primitives, record a per-step state digest chain, "
+                         "and ship a live uint32 fingerprint in metrics")
+    ap.add_argument("--verify-every", type=int, default=1,
+                    help="digest the state every N steps (digesting gathers "
+                         "the full state to host)")
+    ap.add_argument("--verify-out", default=None,
+                    help="write the digest-chain JSON here (default: "
+                         "<ckpt-dir>/digest_chain.json or ./digest_chain.json)")
     ap.add_argument("--heartbeat", action="store_true",
                     help="enable straggler/hang monitor (launch/heartbeat.py)")
     args = ap.parse_args(argv)
@@ -65,7 +75,8 @@ def main(argv=None):
     tcfg = S.TrainConfig(
         opt=O.OptConfig(name=args.opt, lr=args.lr, total_steps=args.steps),
         microbatches=args.microbatches, remat=True,
-        grad_compression=args.grad_compression, seed=args.seed)
+        grad_compression=args.grad_compression, seed=args.seed,
+        digest_metrics=args.verify)
 
     data = make_source(DataConfig(seed=args.seed, batch=args.batch,
                                   seq=args.seq, vocab=cfg.vocab,
@@ -78,6 +89,40 @@ def main(argv=None):
         print(f"resumed from step {start}")
 
     step_fn = build(cfg, tcfg)
+    chain, chain_path = None, None
+    if args.verify:
+        from repro.verify import trace as VT
+        from repro.verify.digest import DigestChain
+
+        # audit the jitted step's own trace — no second model trace
+        findings = VT.audit_jaxpr(step_fn.trace(state, data.batch(start)).jaxpr)
+        if findings:
+            for f in findings:
+                print(f"[verify] {f}", flush=True)
+            raise SystemExit(3)
+        print("[verify] train step jaxpr clean", flush=True)
+        chain_path = args.verify_out or (
+            os.path.join(args.ckpt_dir, "digest_chain.json")
+            if args.ckpt_dir else "digest_chain.json")
+        chain = DigestChain()
+        if start > 0 and os.path.exists(chain_path):
+            # resume the chain at the restored step: keep the records up to
+            # `start` so the resumed run's head stays comparable to a
+            # straight run's (crash/resume ≡ straight, the repo contract)
+            with open(chain_path) as f:
+                prior = DigestChain.from_json(f.read())
+            chain = DigestChain(
+                records=[(s, d) for s, d in prior.records if s <= start])
+            print(f"[verify] resumed digest chain at step {start} "
+                  f"({len(chain)} records)", flush=True)
+
+    def _persist_chain():
+        parent = os.path.dirname(chain_path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(chain_path, "w") as f:
+            f.write(chain.to_json())
+
     monitor = None
     if args.heartbeat:
         from repro.launch.heartbeat import Monitor
@@ -92,6 +137,8 @@ def main(argv=None):
         batch = data.batch(step)
         ts = time.time()
         state, metrics = step_fn(state, batch)
+        if chain is not None and (step + 1) % args.verify_every == 0:
+            chain.append(step + 1, state)
         if monitor is not None:
             jax.block_until_ready(metrics["loss"])
             if monitor.step(time.time() - ts) == "straggler":
@@ -108,12 +155,20 @@ def main(argv=None):
             if pending is not None:
                 pending.join()
             pending = C.save(args.ckpt_dir, step + 1, state, async_=True)
+            if chain is not None:       # chain survives a crash after save
+                _persist_chain()
     if pending is not None:
         pending.join()
     if monitor is not None:
         monitor.stop()
     final_loss = float(metrics["loss"])
-    print(json.dumps({"final_step": args.steps, "final_loss": final_loss}))
+    summary = {"final_step": args.steps, "final_loss": final_loss}
+    if chain is not None:
+        _persist_chain()
+        print(f"[verify] digest chain head {chain.head} "
+              f"({len(chain)} records) -> {chain_path}", flush=True)
+        summary["digest_chain_head"] = chain.head
+    print(json.dumps(summary))
     return final_loss
 
 

@@ -11,11 +11,13 @@ K/V, so llama4/qwen/nemotron-style configs pay no replication tax in HBM.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist.sharding import shard
 from repro.kernels.decode import paged_attention
@@ -242,9 +244,75 @@ def embed_defs(cfg):
     return {"tok": PD((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"))}
 
 
+# one-hot transient budget for the deterministic embedding backward:
+# block = ~2^25 fp32 elements (~128 MB) regardless of vocab size
+_EMBED_BWD_ELEMS = 1 << 25
+
+
+@functools.lru_cache(maxsize=None)
+def _det_embed_lookup(vocab: int, dtype_name: str):
+    """Embedding lookup with a deterministic backward.
+
+    dtable = scatter-add(dy at tokens) ≡ one_hot(tokens)ᵀ @ dy, but the
+    matmul's reduction association is pinned at compile time on every
+    backend, where the scatter-add reduces duplicate tokens in
+    backend-defined order (GPU atomics — the Fig. 1 baseline). fp32
+    accumulation as everywhere. The token axis is processed in fixed-size
+    blocks (ascending scan, ~128 MB one-hot transient each) so the
+    determinism doesn't cost a (B·S, V) allocation at full vocab; block
+    padding uses index == vocab, whose one-hot row is all-zero.
+    """
+    dtype = jnp.dtype(dtype_name)
+
+    @jax.custom_vjp
+    def lookup(table, tokens):
+        return table[tokens]
+
+    def fwd(table, tokens):
+        return table[tokens], tokens
+
+    def block_grad(tok_blk, dy_blk):
+        onehot = jax.nn.one_hot(tok_blk, vocab, dtype=F32)
+        return jax.lax.dot_general(onehot, dy_blk, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=F32)
+
+    def bwd(tokens, dy):
+        flat_tok = tokens.reshape(-1)
+        flat_dy = dy.reshape(-1, dy.shape[-1]).astype(F32)
+        t = flat_tok.shape[0]
+        block = min(t, max(64, _EMBED_BWD_ELEMS // vocab))
+        n_blocks = -(-t // block)
+        if n_blocks == 1:
+            dtable = block_grad(flat_tok, flat_dy)
+        else:
+            pad = n_blocks * block - t
+            if pad:
+                flat_tok = jnp.concatenate(
+                    [flat_tok, jnp.full((pad,), vocab, flat_tok.dtype)])
+                flat_dy = jnp.concatenate(
+                    [flat_dy, jnp.zeros((pad, flat_dy.shape[1]), F32)])
+
+            def acc(dtable, blk):
+                tok_blk, dy_blk = blk
+                return dtable + block_grad(tok_blk, dy_blk), None
+
+            dtable, _ = jax.lax.scan(
+                acc, jnp.zeros((vocab, flat_dy.shape[1]), F32),
+                (flat_tok.reshape(n_blocks, block),
+                 flat_dy.reshape(n_blocks, block, -1)))
+        return dtable.astype(dtype), np.zeros(tokens.shape, jax.dtypes.float0)
+
+    lookup.defvjp(fwd, bwd)
+    return lookup
+
+
 def apply_embed(p, tokens, cfg):
-    return shard(p["tok"].astype(cfg.dtype)[tokens],
-                 "batch", "seq", "act_embed")
+    table = p["tok"].astype(cfg.dtype)
+    if cfg.det_embed_grad:
+        emb = _det_embed_lookup(table.shape[0], str(table.dtype))(table, tokens)
+    else:
+        emb = table[tokens]
+    return shard(emb, "batch", "seq", "act_embed")
 
 
 def lm_head_defs(cfg):

@@ -25,6 +25,7 @@ from repro.dist import compression
 from repro.dist.sharding import logical_to_spec, spec_tree_to_pspecs
 from repro.models import transformer as T
 from repro.train import optimizer as O
+from repro.verify import digest as V
 
 F32 = jnp.float32
 
@@ -37,6 +38,10 @@ class TrainConfig:
     remat_policy: str = "none"    # none (recompute all) | dots (save MXU outputs)
     grad_compression: Optional[str] = None    # None | "int8"
     seed: int = 0
+    digest_metrics: bool = False  # ship a uint32 state fingerprint in metrics
+                                  # (repro.verify.digest.tree_fingerprint) —
+                                  # the live divergence alarm; sha256 chains
+                                  # stay offline (verify.lifecycle)
 
 
 def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
@@ -125,6 +130,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         new_state.update(params=new_p, opt=new_opt, step=state["step"] + 1)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm,
                        lr=O.lr_at(tcfg.opt, state["step"]))
+        if tcfg.digest_metrics:
+            metrics["state_fingerprint"] = V.tree_fingerprint(new_state)
         return new_state, metrics
 
     return step

@@ -1,0 +1,28 @@
+"""``repro.verify`` — bitwise training-lifecycle conformance.
+
+Three layers, each usable on its own:
+
+* :mod:`repro.verify.digest`   — canonical bitwise pytree digests (sha256 over
+  raw array bytes + dtype + shape + tree path) and per-step digest *chains*,
+  so two runs — or two processes, or two commits — compare by one hex string.
+* :mod:`repro.verify.trace`    — a jaxpr auditor that walks a (lowered) train
+  step and flags nondeterminism-prone primitives; a lint and a test oracle.
+* :mod:`repro.verify.lifecycle`— drivers that execute the real train step
+  under straight / crash-resume / elastic-reshard scenarios and return digest
+  chains for conformance comparison (tests/test_lifecycle_bitwise.py).
+"""
+from repro.verify.digest import (DigestChain, batch_digest, leaf_digest,
+                                 tree_digest, tree_fingerprint)
+
+__all__ = [
+    "DigestChain", "batch_digest", "leaf_digest", "tree_digest",
+    "tree_fingerprint", "Finding", "audit_fn", "audit_jaxpr",
+]
+
+
+def __getattr__(name):
+    # lazy: keeps `python -m repro.verify.trace` from double-importing trace
+    if name in ("Finding", "audit_fn", "audit_jaxpr"):
+        from repro.verify import trace
+        return getattr(trace, name)
+    raise AttributeError(name)

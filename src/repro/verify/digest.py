@@ -1,0 +1,179 @@
+"""Canonical bitwise pytree digests + per-step digest chains.
+
+The digest of a leaf is sha256 over ``dtype|shape|raw bytes`` of the
+C-contiguous host copy — a pure function of the *values*, independent of
+device placement, sharding layout, or memory order. bf16 (and any other
+ml_dtypes extended dtype) hashes its own 2-byte representation, so a
+bf16 → f32 → bf16 checkpoint round trip digests identically iff it is
+lossless.
+
+A :class:`DigestChain` folds one digest per step into a running sha256 — two
+training runs are bitwise-conformant iff their chain heads match, and the
+first diverging step is recoverable from the per-step record.  Chains
+serialize to JSON so conformance can be asserted across processes (the
+elastic-reshard subprocess tests) and across commits (the CI artifact).
+
+``tree_fingerprint`` is the in-graph companion: a jittable uint32 fold over
+the bit patterns of every leaf, cheap enough to ship in the per-step metrics
+(``TrainConfig.digest_metrics``) as a live divergence alarm; the sha256 chain
+remains the offline source of truth.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def leaf_digest(x) -> str:
+    """sha256 hex over ``dtype|shape|raw bytes`` of one array (host order)."""
+    a = np.asarray(jax.device_get(x))
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(f"{a.dtype}|{a.shape}|".encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def combine_leaf_digests(named: Dict[str, str]) -> str:
+    """Fold ``{path: leaf_digest}`` into one tree digest (path-sorted lines).
+
+    Sorting by path makes the digest independent of dict insertion order;
+    including the path makes structurally different trees with equal leaves
+    distinguishable. Exposed so callers that already hold per-leaf digests
+    (ckpt manifests) don't hash the data twice.
+    """
+    h = hashlib.sha256()
+    for line in sorted(f"{k}={v}" for k, v in named.items()):
+        h.update(line.encode())
+        h.update(b"\n")
+    return h.hexdigest()
+
+
+def tree_digest(tree) -> str:
+    """sha256 hex over the path-sorted ``path=leaf_digest`` lines of a pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return combine_leaf_digests({_path_str(p): leaf_digest(x)
+                                 for p, x in flat})
+
+
+def batch_digest(batch: Dict) -> str:
+    """Digest of one data batch — the token-stream conformance unit."""
+    return tree_digest(batch)
+
+
+class DigestChain:
+    """Append-only sha256 chain of (step, tree_digest) records.
+
+    ``head`` commits to every digest *and* its step index in order, so a
+    resumed run that replays, skips, or reorders a step cannot collide with
+    the straight run.
+    """
+
+    def __init__(self, records: Optional[List[Tuple[int, str]]] = None,
+                 head: Optional[str] = None):
+        self.records: List[Tuple[int, str]] = list(records or [])
+        self._head = head if head is not None else hashlib.sha256().hexdigest()
+        if records and head is None:       # recompute from scratch
+            self._head = hashlib.sha256().hexdigest()
+            rec, self.records = self.records, []
+            for step, dg in rec:
+                self._append(step, dg)
+
+    @property
+    def head(self) -> str:
+        return self._head
+
+    def _append(self, step: int, digest: str):
+        h = hashlib.sha256()
+        h.update(self._head.encode())
+        h.update(f"|{step}|{digest}".encode())
+        self._head = h.hexdigest()
+        self.records.append((int(step), digest))
+
+    def append(self, step: int, tree) -> str:
+        """Digest ``tree`` and fold it into the chain; returns the new head."""
+        self._append(step, tree_digest(tree))
+        return self._head
+
+    def append_digest(self, step: int, digest: str) -> str:
+        self._append(step, digest)
+        return self._head
+
+    # ---------------------------------------------------------- comparison
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, DigestChain) and self.head == other.head
+                and self.records == other.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def first_divergence(self, other: "DigestChain") -> Optional[int]:
+        """Step index of the first differing record, or None if conformant."""
+        for (sa, da), (sb, db) in zip(self.records, other.records):
+            if (sa, da) != (sb, db):
+                return sa
+        if len(self.records) != len(other.records):
+            return (self.records if len(self.records) > len(other.records)
+                    else other.records)[min(len(self.records),
+                                            len(other.records))][0]
+        return None
+
+    # ----------------------------------------------------------- serialize
+    def to_json(self) -> str:
+        return json.dumps({"head": self.head,
+                           "records": [[s, d] for s, d in self.records]})
+
+    @classmethod
+    def from_json(cls, text: str) -> "DigestChain":
+        obj = json.loads(text)
+        chain = cls(records=[(int(s), d) for s, d in obj["records"]])
+        if chain.head != obj["head"]:
+            raise ValueError("digest chain JSON is internally inconsistent: "
+                             f"recomputed head {chain.head} != recorded "
+                             f"{obj['head']}")
+        return chain
+
+
+# ------------------------------------------------------------------ in-graph
+_FNV_PRIME = np.uint32(16777619)
+
+
+def _leaf_fp(x) -> jax.Array:
+    """Position-sensitive uint32 fold over one leaf's bit pattern (jittable)."""
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    elif jnp.dtype(x.dtype).itemsize >= 4:  # f32/i32 + f64/i64 (word pairs)
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    else:                                   # int8 codes, bools, int16, …
+        bits = x.astype(jnp.uint32)         # value == bit pattern mod 2^32
+    flat = bits.reshape(-1)
+    # modular uint32 arithmetic is exact and commutative → layout-independent;
+    # the index weight makes it sensitive to *which position* a bit flips in.
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    weights = idx * np.uint32(2654435761) + np.uint32(1)
+    return jnp.sum(flat * weights, dtype=jnp.uint32)
+
+
+def tree_fingerprint(tree) -> jax.Array:
+    """Jittable uint32 fingerprint of a pytree — the cheap in-metrics alarm.
+
+    Not a cryptographic digest: use it to *detect* divergence live (any
+    single-bit flip in any leaf changes it with overwhelming probability),
+    then localize with :func:`tree_digest` chains offline.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    acc = jnp.uint32(2166136261)
+    for path, leaf in sorted(flat, key=lambda kv: _path_str(kv[0])):
+        salt = np.uint32(
+            int(hashlib.sha256(_path_str(path).encode()).hexdigest()[:8], 16))
+        acc = (acc ^ (_leaf_fp(leaf) + salt)) * _FNV_PRIME
+    return acc

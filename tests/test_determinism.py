@@ -1,4 +1,9 @@
 """Determinism substrate tests (paper §1/§2/Table 1 analogue)."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +14,8 @@ from repro.core import determinism as det
 from repro.core import schedules as S
 
 jax.config.update("jax_enable_x64", False)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _parts(seed, n=16, shape=(8, 4), dtype=jnp.float32, scale=1e4):
@@ -73,6 +80,93 @@ def test_schedule_ordered_dq_follows_schedule():
     # error unbounded — compare with an absolute tolerance scaled to the inputs.
     np.testing.assert_allclose(np.asarray(a1, np.float32), np.asarray(b, np.float32),
                                atol=8 * 0.008 * 100.0)
+
+
+# --------------------------------------------- property tests (PR 4 satellite)
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 24))
+def test_ordered_sum_permutation_sensitive_but_stable(seed, n):
+    """ordered_sum pins ((x0+x1)+x2)+…: bitwise stable across calls, but a
+    permuted operand order is a *different* association and (for wide dynamic
+    range) gives different bits — exactly the property the DASH schedules
+    exploit."""
+    p = _parts(seed, n=n, shape=(16,), scale=1e6)
+    a = det.ordered_sum(p)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(det.ordered_sum(p)))
+    rng = np.random.RandomState(seed)
+    deviated = False
+    for _ in range(8):
+        perm = rng.permutation(n)
+        b = det.permuted_sum(p, perm)
+        # same multiset of addends, so equality is only plausible when the
+        # permutation is the identity
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            deviated = True
+    if n > 4:       # small n: too few distinct associations to guarantee it
+        assert deviated
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 20),
+       arity=st.sampled_from([2, 4]))
+def test_tree_sum_fixed_stable_and_shape_pinned(seed, n, arity):
+    p = _parts(seed, n=n, shape=(8,), scale=1e5)
+    a = det.tree_sum_fixed(p, arity=arity)
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(det.tree_sum_fixed(p, arity=arity)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_schedule_ordered_dq_stable_and_order_sensitive(seed):
+    n = 8
+    p = _parts(seed, n=n, shape=(16,), scale=1e6)
+    fwd = list(range(n))
+    rev = fwd[::-1]
+    a = det.schedule_ordered_dq(p, fwd)
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(det.schedule_ordered_dq(p, fwd)))
+    b = det.schedule_ordered_dq(p, rev)
+    np.testing.assert_array_equal(np.asarray(b),
+                                  np.asarray(det.schedule_ordered_dq(p, rev)))
+    # the reduction order is part of the contract: reversed order is allowed
+    # to (and at this dynamic range does) change bits
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+_RING_FOLD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import determinism as det
+
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 64), minval=-1e4,
+                           maxval=1e4)
+    for n in (2, 4, 8):
+        mesh = Mesh(np.array(jax.devices()[:n]), ("x",))
+        f = jax.jit(shard_map(lambda v: det.ring_ordered_psum(v[0], "x"),
+                              mesh=mesh, in_specs=(P("x"),),
+                              out_specs=P(None), check_rep=False))
+        got = f(x[:n])
+        # sequential left fold over the n shards — the declared association
+        want = det.ordered_sum(x[:n])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        print(f"n={n} ring fold matches sequential association")
+""")
+
+
+def test_ring_ordered_psum_matches_sequential_fold_n248():
+    """PR 4 satellite: the pinned ring association equals the sequential fold
+    for n ∈ {2, 4, 8} — i.e. the association is mesh-size-declared, not
+    topology-derived (subprocess: forced 8-CPU-device platform)."""
+    r = subprocess.run([sys.executable, "-c", _RING_FOLD_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO_ROOT)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    for n in (2, 4, 8):
+        assert f"n={n} ring fold matches sequential association" in r.stdout
 
 
 def test_ring_ordered_psum_single_device():

@@ -1,8 +1,10 @@
 """Checkpoint/restart + elastic-reshard + failure-injection tests (deliverable:
 fault tolerance for 1000+ node posture)."""
+import json
 import os
 import subprocess
 import sys
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +81,155 @@ print("elastic reshard OK")
                        cwd=REPO_ROOT)
     assert r.returncode == 0, r.stderr
     assert "elastic reshard OK" in r.stdout
+
+
+# -------------------------------------------------- manifest dtype contract
+def test_manifest_records_original_bf16_dtype(tmp_path):
+    """Regression (PR 4 satellite): the manifest used to record the
+    *post-upcast* storage dtype (float32) for bf16 leaves; it must record the
+    original dtype, with the storage dtype kept separately."""
+    tree = {"w": jnp.asarray([1.5, -2.25, 3e-2], jnp.bfloat16),
+            "b": jnp.zeros((2,), jnp.float32)}
+    C.save(str(tmp_path), 1, tree)
+    manifest = C.read_manifest(str(tmp_path), 1)
+    assert manifest["arrays"]["w"]["dtype"] == "bfloat16"
+    assert manifest["arrays"]["w"]["stored_dtype"] == "float32"
+    assert manifest["arrays"]["b"]["dtype"] == "float32"
+
+
+def test_bf16_roundtrip_bitwise_and_wrong_dtype_target_rejected(tmp_path):
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (64,), jnp.float32).astype(jnp.bfloat16)}
+    C.save(str(tmp_path), 1, tree)
+    restored = C.restore(str(tmp_path), 1, tree)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(jax.lax.bitcast_convert_type(restored["w"], jnp.uint16)),
+        np.asarray(jax.lax.bitcast_convert_type(tree["w"], jnp.uint16)))
+    # a target that silently asks for a different dtype must fail loudly
+    with pytest.raises(ValueError, match="dtype mismatch.*'w'"):
+        C.restore(str(tmp_path), 1, {"w": jnp.zeros((64,), jnp.float32)})
+
+
+def test_restore_verifies_leaf_digests(tmp_path):
+    """Bit corruption in the stored arrays is caught by the manifest digests."""
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    C.save(str(tmp_path), 3, tree)
+    npz = tmp_path / "step_3" / "arrays.npz"
+    corrupt = {"w": np.arange(16, dtype=np.float32)}
+    corrupt["w"][7] += 1e-4
+    np.savez(npz, **corrupt)
+    with pytest.raises(ValueError, match="digest mismatch.*'w'"):
+        C.restore(str(tmp_path), 3, tree)
+    assert C.restore(str(tmp_path), 3, tree, verify=False) is not None
+
+
+# ------------------------------------------------------------- crash safety
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_async_save_killed_midwrite_keeps_latest_restorable(tmp_path,
+                                                            monkeypatch):
+    """Kill the async save while it writes arrays.npz: the previous checkpoint
+    stays the durable latest, restores cleanly, and no torn step is published."""
+    cfg, tcfg, state = _small_state()
+    C.save(str(tmp_path), 5, state)
+
+    def dying_savez(*a, **kw):
+        raise RuntimeError("simulated node death mid-write")
+
+    monkeypatch.setattr(C.np, "savez", dying_savez)
+    t = C.save(str(tmp_path), 6, state, async_=True)
+    t.join()
+    monkeypatch.undo()
+    assert C.latest_step(str(tmp_path)) == 5
+    assert not any(n.startswith(".tmp") for n in os.listdir(tmp_path))
+    restored = C.restore(str(tmp_path), 5, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_never_deletes_checkpoint_under_concurrent_restore(tmp_path,
+                                                              monkeypatch):
+    """A restore in flight pins its checkpoint: keep_last pruning skips it
+    until the read completes, then a later GC may collect it."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    for s in (1, 2, 3):
+        C.save(str(tmp_path), s, tree, keep_last=10)
+
+    entered, release = threading.Event(), threading.Event()
+    real_load = C.np.load
+
+    def slow_load(path, *a, **kw):
+        entered.set()
+        assert release.wait(timeout=30)
+        return real_load(path, *a, **kw)
+
+    monkeypatch.setattr(C.np, "load", slow_load)
+    result = {}
+
+    def reader():
+        result["tree"] = C.restore(str(tmp_path), 1, tree)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    assert entered.wait(timeout=30)
+    # GC while step_1 is being read: it must survive, others may be pruned
+    C.save(str(tmp_path), 4, tree, keep_last=1)
+    assert 1 in C.available_steps(str(tmp_path))
+    release.set()
+    th.join(timeout=30)
+    monkeypatch.undo()
+    np.testing.assert_array_equal(np.asarray(result["tree"]["w"]),
+                                  np.asarray(tree["w"]))
+    # the pin is gone once the restore finished
+    C._gc(str(tmp_path), 1)
+    assert C.available_steps(str(tmp_path)) == [4]
+
+
+def test_same_step_overwrite_waits_for_concurrent_restore(tmp_path):
+    """Re-saving step k must not delete step_k out from under a restore that
+    pinned it: the publish waits for the pin to clear."""
+    old = {"w": jnp.arange(8, dtype=jnp.float32)}
+    new = {"w": jnp.arange(8, dtype=jnp.float32) + 1}
+    C.save(str(tmp_path), 2, old)
+    with C._reading(str(tmp_path), 2):      # a restore is mid-read
+        t = C.save(str(tmp_path), 2, new, async_=True)
+        t.join(timeout=0.5)
+        assert t.is_alive()                 # publish is parked on the pin
+        # the pinned checkpoint is still intact and readable
+        np.testing.assert_array_equal(
+            np.asarray(C.restore(str(tmp_path), 2, old)["w"]),
+            np.asarray(old["w"]))
+    t.join(timeout=30)
+    assert not t.is_alive()
+    np.testing.assert_array_equal(
+        np.asarray(C.restore(str(tmp_path), 2, new)["w"]),
+        np.asarray(new["w"]))
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_same_step_overwrite_fails_rather_than_breaking_a_wedged_reader(
+        tmp_path, monkeypatch):
+    """If a reader holds its pin past the publish timeout, the SAVE fails
+    (nothing published, tmp cleaned) — the pinned checkpoint is never
+    deleted out from under the reader."""
+    old = {"w": jnp.arange(4, dtype=jnp.float32)}
+    new = {"w": jnp.arange(4, dtype=jnp.float32) * 2}
+    C.save(str(tmp_path), 1, old)
+    monkeypatch.setattr(C, "_PUBLISH_PIN_TIMEOUT", 0.05)
+    with C._reading(str(tmp_path), 1):
+        t = C.save(str(tmp_path), 1, new, async_=True)
+        t.join(timeout=30)
+        assert not t.is_alive()             # save gave up (TimeoutError)
+        np.testing.assert_array_equal(      # reader's checkpoint intact
+            np.asarray(C.restore(str(tmp_path), 1, old)["w"]),
+            np.asarray(old["w"]))
+    assert not any(n.startswith(".tmp") for n in os.listdir(tmp_path))
+    # the failed overwrite never published: step 1 still holds the old bits
+    np.testing.assert_array_equal(
+        np.asarray(C.restore(str(tmp_path), 1, old)["w"]),
+        np.asarray(old["w"]))
 
 
 @pytest.mark.slow

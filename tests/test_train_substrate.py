@@ -83,6 +83,56 @@ def test_data_host_sharding_partitions_global_batch():
     assert not np.array_equal(np.asarray(got[0]), np.asarray(got[1]))
 
 
+def test_synthetic_host_slices_partition_global_batch():
+    """v2 stream contract: host slices are rows of ONE global draw, so any
+    host split concatenates back to the host_count=1 batch bitwise."""
+    full = SyntheticLM(DataConfig(seed=5, batch=8, seq=16, vocab=50)).batch(3)
+    for hc in (2, 4):
+        parts = [SyntheticLM(DataConfig(seed=5, batch=8, seq=16, vocab=50,
+                                        host_index=i, host_count=hc)).batch(3)
+                 for i in range(hc)]
+        glued = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+        np.testing.assert_array_equal(glued, np.asarray(full["tokens"]))
+
+
+def test_memmap_step0_stream_unchanged_from_v1(tmp_path):
+    """PR 4 satellite: the constant-size draw (step folded into the key) must
+    reproduce the v1 step-0 stream bitwise; v1 drew ``batch*(step+1)`` randints
+    from fold_in(key, 0) — identical key and shape at step 0."""
+    import jax as _jax
+    toks = (np.arange(40_000, dtype=np.uint32) * 7) % 997
+    f = tmp_path / "corpus.bin"
+    toks.tofile(f)
+    cfg = DataConfig(seed=11, batch=4, seq=32, vocab=997, path=str(f))
+    src = make_source(cfg)
+    # the v1 expression, inlined
+    v1_idx = _jax.random.randint(
+        _jax.random.fold_in(_jax.random.PRNGKey(cfg.seed), 0),
+        (cfg.batch * 1,), 0, src.n_windows, jnp.uint32)
+    v1_starts = np.asarray(v1_idx[:cfg.batch]) * cfg.seq
+    v1_rows = np.stack([toks[s:s + cfg.seq + 1].astype(np.int32)
+                        for s in v1_starts])
+    got = src.batch(0)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]), v1_rows[:, :-1])
+    # constant-size draws: step k uses a (batch,)-shaped draw, not O(step)
+    b_late = src.batch(10_000)          # would draw 40M randints under v1
+    assert b_late["tokens"].shape == (4, 32)
+
+
+def test_memmap_host_slices_partition_global_batch(tmp_path):
+    toks = np.arange(20_000, dtype=np.uint32) % 513
+    f = tmp_path / "corpus.bin"
+    toks.tofile(f)
+    full = make_source(DataConfig(seed=2, batch=4, seq=16, vocab=513,
+                                  path=str(f))).batch(6)
+    parts = [make_source(DataConfig(seed=2, batch=4, seq=16, vocab=513,
+                                    path=str(f), host_index=i,
+                                    host_count=2)).batch(6)
+             for i in range(2)]
+    glued = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(glued, np.asarray(full["tokens"]))
+
+
 def test_memmap_corpus(tmp_path):
     toks = np.arange(10_000, dtype=np.uint32) % 513
     f = tmp_path / "corpus.bin"
@@ -144,6 +194,24 @@ def test_train_step_with_microbatches_and_compression():
     s2, m2 = step(s1, data.batch(1))
     assert np.isfinite(float(m2["loss"]))
     assert int(s2["step"]) == 2
+
+
+def test_train_step_digest_metrics_fingerprint():
+    """digest_metrics=True ships a uint32 state fingerprint in metrics that is
+    bitwise repeatable and matches the offline fingerprint of the new state."""
+    from repro.verify.digest import tree_fingerprint
+    cfg = registry.get("stablelm-1.6b").reduced()
+    tcfg = S.TrainConfig(opt=O.OptConfig(lr=1e-3, total_steps=10),
+                         digest_metrics=True)
+    state = S.init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    from repro.data.pipeline import DataConfig as DC, SyntheticLM as SL
+    data = SL(DC(seed=0, batch=2, seq=32, vocab=cfg.vocab))
+    step = jax.jit(S.make_train_step(cfg, tcfg))
+    s1, m1 = step(state, data.batch(0))
+    s1b, m1b = step(state, data.batch(0))
+    assert m1["state_fingerprint"].dtype == jnp.uint32
+    assert int(m1["state_fingerprint"]) == int(m1b["state_fingerprint"])
+    assert int(m1["state_fingerprint"]) == int(tree_fingerprint(s1))
 
 
 def test_train_two_seeds_differ_single_seed_repeats():

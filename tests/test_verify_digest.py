@@ -1,0 +1,111 @@
+"""Unit tests for repro.verify.digest — the canonical bitwise digest layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.verify import digest as D
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.zeros((), jnp.int32)}}
+
+
+# ------------------------------------------------------------------- leaves
+def test_leaf_digest_value_sensitivity():
+    x = jnp.arange(8, dtype=jnp.float32)
+    assert D.leaf_digest(x) == D.leaf_digest(x + 0)
+    assert D.leaf_digest(x) != D.leaf_digest(
+        x.at[3].set(jnp.nextafter(x[3], jnp.inf)))   # one ulp
+
+
+def test_leaf_digest_dtype_and_shape_sensitivity():
+    """Same raw bytes under a different dtype or shape must not collide."""
+    x = jnp.arange(8, dtype=jnp.int32)
+    assert D.leaf_digest(x) != D.leaf_digest(
+        jax.lax.bitcast_convert_type(x, jnp.float32))
+    assert D.leaf_digest(x) != D.leaf_digest(x.reshape(2, 4))
+
+
+def test_leaf_digest_layout_independence():
+    """A transposed copy with identical values digests identically even though
+    the numpy source buffer is non-contiguous."""
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    assert D.leaf_digest(a) == D.leaf_digest(np.asfortranarray(a))
+    assert D.leaf_digest(a.T) == D.leaf_digest(np.ascontiguousarray(a.T))
+
+
+def test_leaf_digest_bf16_hashes_own_bits():
+    """bf16 digests its 2-byte representation: the digest survives a lossless
+    f32 round trip and differs from the f32 upcast's digest."""
+    x = jnp.asarray([1.5, -2.25, 3e-2], jnp.bfloat16)
+    round_trip = x.astype(jnp.float32).astype(jnp.bfloat16)
+    assert D.leaf_digest(x) == D.leaf_digest(round_trip)
+    assert D.leaf_digest(x) != D.leaf_digest(x.astype(jnp.float32))
+
+
+# -------------------------------------------------------------------- trees
+def test_tree_digest_path_sensitivity():
+    x = jnp.arange(4.0)
+    assert D.tree_digest({"a": x, "b": x}) != D.tree_digest({"a": x, "c": x})
+    assert D.tree_digest({"a": x}) != D.tree_digest({"a": {"a": x}})
+
+
+def test_tree_digest_single_bit_flip():
+    t = _tree()
+    d0 = D.tree_digest(t)
+    bits = jax.lax.bitcast_convert_type(t["b"]["c"], jnp.uint16)
+    t["b"]["c"] = jax.lax.bitcast_convert_type(bits.at[0].set(bits[0] ^ 1),
+                                               jnp.bfloat16)
+    assert D.tree_digest(t) != d0
+
+
+# -------------------------------------------------------------------- chain
+def test_chain_is_order_and_step_sensitive():
+    t, u = _tree(), jax.tree.map(lambda x: x + 1, _tree())
+    c1 = D.DigestChain(); c1.append(1, t); c1.append(2, u)
+    c2 = D.DigestChain(); c2.append(1, u); c2.append(2, t)
+    c3 = D.DigestChain(); c3.append(2, t); c3.append(3, u)
+    assert len({c1.head, c2.head, c3.head}) == 3
+
+
+def test_chain_json_roundtrip_and_tamper_detection():
+    c = D.DigestChain()
+    c.append(1, _tree())
+    c.append(2, _tree())
+    rt = D.DigestChain.from_json(c.to_json())
+    assert rt == c and rt.head == c.head
+    tampered = c.to_json().replace(c.records[0][1][:8], "deadbeef")
+    with pytest.raises(ValueError, match="inconsistent"):
+        D.DigestChain.from_json(tampered)
+
+
+def test_chain_first_divergence():
+    a, b = D.DigestChain(), D.DigestChain()
+    t = _tree()
+    a.append(1, t); b.append(1, t)
+    a.append(2, t); b.append(2, jax.tree.map(lambda x: x + 1, t))
+    assert a.first_divergence(b) == 2
+    assert a.first_divergence(a) is None
+
+
+# -------------------------------------------------------------- fingerprint
+def test_fingerprint_jit_matches_eager_and_flips_on_bit():
+    t = _tree()
+    fp_eager = D.tree_fingerprint(t)
+    fp_jit = jax.jit(D.tree_fingerprint)(t)
+    assert fp_eager.dtype == jnp.uint32
+    assert int(fp_eager) == int(fp_jit)
+    t2 = {**t, "a": t["a"].at[0, 0].set(jnp.float32(1e-45))}  # one subnormal
+    assert int(D.tree_fingerprint(t2)) != int(fp_eager)
+
+
+def test_fingerprint_position_sensitive():
+    """Swapping two unequal values must change the fingerprint (a plain xor or
+    unweighted sum would collide)."""
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    swapped = x.at[0].set(x[1]).at[1].set(x[0])
+    assert int(D.tree_fingerprint({"x": x})) != \
+        int(D.tree_fingerprint({"x": swapped}))
