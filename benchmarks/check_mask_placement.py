@@ -1,0 +1,87 @@
+"""CI gate: generalized shift placement must beat fa3-order placement on
+ragged columns, and hit the ragged lower bound where its rotation assignment
+is collision-free.
+
+Golden properties, re-derived per run (no stored goldens to go stale):
+  1. for every mask in the sweep, simulate(shift) <= simulate(fa3-order);
+  2. for the stacked-column masks (document, prefix-LM) the inequality is
+     STRICT — fa3-order serializes the column heads (the Fig. 3 cascade),
+     shift staggers them;
+  3. shift's simulated makespan equals ``ragged_lower_bound`` (== the DAG
+     critical path, Lemma-1 monotone) on the window/document/streaming
+     families — the optimality certificate;
+  4. every compiled schedule passes ``Schedule.validate()``.
+
+Run by CI:  PYTHONPATH=src python benchmarks/check_mask_placement.py
+"""
+import sys
+
+from repro.core import dag as dag_mod
+from repro.core import simulator as sim
+from repro.masks import (Document, PrefixLM, SlidingWindow,
+                         compile_block_schedule, streaming_mask)
+
+C, R = 1.0, 0.5
+BLK = 128
+
+
+def sweep():
+    for n in (4, 8, 16, 32):
+        s = n * BLK
+        yield ("sliding_window", n, SlidingWindow(max(BLK, s // 3)), True)
+        yield ("document", n,
+               Document.from_lengths((s // 4, s // 2, s - s // 4 - s // 2)),
+               True)
+        yield ("prefix_lm", n, PrefixLM(s // 4), False)
+        yield ("streaming", n, streaming_mask(max(BLK, s // 4), BLK), True)
+
+
+STRICT = {"document", "prefix_lm"}
+
+
+def check(name, n, mask, expect_optimal):
+    shift = compile_block_schedule(mask, n, n, BLK, BLK)
+    fa3 = compile_block_schedule(mask, n, n, BLK, BLK, placement="fa3")
+    shift.validate()
+    fa3.validate()
+    t_shift = sim.simulate(shift, C, R).makespan
+    t_fa3 = sim.simulate(fa3, C, R).makespan
+    lb = sim.ragged_lower_bound(shift, C, R)
+    if t_shift > t_fa3 + 1e-9:
+        return f"shift ({t_shift}) slower than fa3-order ({t_fa3})"
+    if name in STRICT and not t_shift < t_fa3 - 1e-9:
+        return (f"shift ({t_shift}) must STRICTLY beat fa3-order ({t_fa3}) "
+                "on stacked ragged columns")
+    if expect_optimal:
+        if abs(t_shift - lb) > 1e-9:
+            return f"shift ({t_shift}) misses the lower bound ({lb})"
+        d = dag_mod.build_dag(shift, C, R)
+        if not d.lemma1_monotone():
+            return "collision-free shift placement must be Lemma-1 monotone"
+        if abs(d.critical_path(True) - t_shift) > 1e-9:
+            return (f"DAG critical path ({d.critical_path(True)}) != "
+                    f"simulated makespan ({t_shift})")
+    return None, t_shift, t_fa3, lb
+
+
+def main() -> int:
+    failures = []
+    for name, n, mask, expect_optimal in sweep():
+        res = check(name, n, mask, expect_optimal)
+        if isinstance(res, str):
+            failures.append((name, n, res))
+            print(f"FAIL {name} n={n}: {res}")
+        else:
+            _, t_shift, t_fa3, lb = res
+            opt = "optimal" if abs(t_shift - lb) < 1e-9 else f"lb={lb:.1f}"
+            print(f"ok   {name:<15} n={n:>3}: shift={t_shift:7.1f} "
+                  f"fa3-order={t_fa3:7.1f} ({t_fa3 / t_shift:4.2f}x, {opt})")
+    if failures:
+        print(f"{len(failures)} placement check(s) failed", file=sys.stderr)
+        return 1
+    print("all mask placement checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

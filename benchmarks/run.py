@@ -9,6 +9,9 @@
   bench_roofline       §Roofline terms from the dry-run artifacts (ours)
   bench_ring           cross-chip ring attention, contig vs zigzag (ours)
   bench_serve          continuous-batching vs static serving tokens/s (ours)
+  bench_masks          block-sparse mask schedules: sliding-window/document/
+                       prefix/streaming grids, shift vs fa3-order placement;
+                       writes BENCH_masks.json (ours)
 """
 import importlib
 import sys
@@ -22,6 +25,7 @@ MODULES = [
     "benchmarks.bench_roofline",
     "benchmarks.bench_ring",
     "benchmarks.bench_serve",
+    "benchmarks.bench_masks",
 ]
 
 

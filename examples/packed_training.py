@@ -1,0 +1,61 @@
+"""Packed-document training demo (repro.masks + the deterministic packer).
+
+Builds multi-document rows with the deterministic greedy packer — segment ids
+mask cross-document attention, RoPE positions restart per document, labels stop
+at document boundaries — and trains a small LM for a few steps, twice, printing
+the per-step losses and the state digest chain to show the run is bitwise
+reproducible. Also renders the block map + compiled DASH schedule of the
+equivalent static Document mask.
+
+Run:  PYTHONPATH=src python examples/packed_training.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gantt import compare_masked
+from repro.data.pipeline import DataConfig, PackedDocs
+from repro.masks import Document
+from repro.train import step as TS
+from repro.verify.digest import DigestChain
+
+CFG = ModelConfig(
+    name="packed-demo", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, vocab_pad=128, head_dim_=32,
+    block_pattern=("attn",), max_seq=128, dtype_name="float32",
+    packed_inputs=True)
+
+
+def run(steps=4):
+    tcfg = TS.TrainConfig(remat=False)
+    src = PackedDocs(DataConfig(seed=11, batch=4, seq=128, vocab=CFG.vocab))
+    state = TS.init_state(CFG, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(TS.make_train_step(CFG, tcfg))
+    chain = DigestChain()
+    losses = []
+    for i in range(steps):
+        batch = src.batch(i)
+        if i == 0:
+            segs = np.asarray(batch["segment_ids"][0])
+            print(f"row 0 packs {len(set(segs[segs > 0]))} documents; "
+                  f"{(segs == 0).sum()} pad tokens")
+        state, metrics = step(state, batch)
+        losses.append(float(metrics['loss']))
+        chain.append(i, state)
+    return losses, chain
+
+
+def main():
+    l1, c1 = run()
+    l2, c2 = run()
+    for i, (a, b) in enumerate(zip(l1, l2)):
+        print(f"step {i}: loss={a:.4f}  (rerun: {b:.4f})")
+    assert l1 == l2 and c1.head == c2.head
+    print(f"digest chain head (both runs): {c1.head[:16]}…  ✓ bitwise")
+
+    print("\nstatic Document mask, block map + shift vs fa3-order placement:")
+    print(compare_masked(Document.from_lengths((96, 160)), 8, 8, 32, 32))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,12 @@ class ModelConfig:
     attention_impl: str = "xla"    # xla | pallas (DASH kernels)
     dash_schedule: str = "symmetric_shift_or_shift"
     attn_chunk_q: int = 1024       # q-chunked attention above this seq (HBM bound)
+    attn_window: int = 0           # sliding-window size in tokens (0 = full);
+                                   # lowers as masks.SlidingWindow on both impls
+    packed_inputs: bool = False    # batches carry segment_ids/positions from
+                                   # the deterministic sequence packer
+                                   # (data.pipeline.pack_documents): attention
+                                   # is segment-masked, RoPE restarts per doc
     # moe
     n_experts: int = 0
     top_k: int = 0

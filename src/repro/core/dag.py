@@ -12,6 +12,17 @@ This module is the formal layer: it builds the DAG for any
 :class:`repro.core.schedules.Schedule`, computes longest paths, and checks the
 Lemma-1 condition.  The event-driven :mod:`repro.core.simulator` is the operational
 layer (it also models worker occupancy, which the DAG alone does not).
+
+The construction is defined purely over ``schedule.chains`` and
+``schedule.reduction_order``, so **ragged** block-sparse schedules
+(:func:`repro.masks.schedule.compile_block_schedule` — unequal chain lengths,
+per-column ragged heights) build the same way: chain depth counts each
+worker's own tasks, and the Lemma-1 monotonicity test applies verbatim.  For a
+collision-free shift placement every dependency edge connects strictly
+increasing execution slots, hence is depth-monotone, and the critical path
+equals the chain bound ``max_chain·(c+r)`` — the optimality certificate the
+mask tests assert (``critical_path == simulate().makespan ==
+ragged_lower_bound``).
 """
 from __future__ import annotations
 

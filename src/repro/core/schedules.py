@@ -26,6 +26,16 @@ Four generators are provided, mirroring the paper:
                      with offsets on segment boundaries ("diagonal-initialized shift
                      on the conceptual square", §3.4 + Fig. 7).
 
+Beyond the two paper masks, a Schedule can carry an arbitrary **ragged** cell
+set (``cells`` — one (kv, q) tile list per head, from a block-sparse mask's
+block map): columns then have unequal heights and worker chains unequal
+lengths.  :func:`repro.masks.schedule.compile_block_schedule` builds these
+(generalizing :func:`_columns`/:func:`make_schedule` to per-column ragged cell
+lists); ``validate()``/``worker_chains()``/``prefetch_arrays()`` below operate
+on the explicit cell set, and the no-op sentinel padding of
+:meth:`Schedule.worker_chains` repeats each worker's *own* last task so ragged
+chains pad without issuing DMAs or touching other workers' rows.
+
 Schedules are plain data: they drive (a) the Gantt :mod:`repro.core.simulator`,
 (b) the Pallas backward kernel's scalar-prefetch index maps
 (:mod:`repro.kernels.flash_bwd`), and (c) the cross-chip ring/context-parallel
@@ -69,6 +79,13 @@ class Schedule:
       chains: per-worker task lists; contiguous execution order.
       reduction_order: per ``(head, q)`` the prescribed accumulation order given as a
         list of ``(kv, worker)`` in reduction sequence. Deterministic by construction.
+      cells: optional explicit per-head (kv, q) cell list for **ragged**
+        (block-sparse-mask) schedules; ``None`` means the rectangular /
+        triangular set implied by ``causal``.
+      partial_cells: (kv, q) tiles only partially inside the mask — the kernels
+        mask-multiply these; FULL tiles run unmasked.
+      mask_key: :meth:`repro.masks.spec.MaskSpec.key` of the compiling mask;
+        kernel entry points assert it matches the mask they were handed.
     """
 
     name: str
@@ -79,6 +96,9 @@ class Schedule:
     n_heads: int
     chains: Tuple[Tuple[Task, ...], ...]
     reduction_order: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]]
+    cells: Tuple[Tuple[int, int], ...] | None = None
+    partial_cells: Tuple[Tuple[int, int], ...] = ()
+    mask_key: str | None = None
     # per-instance memo for derived kernel arrays (worker_chains / serialization);
     # excluded from equality so two structurally equal schedules stay equal.
     _memo: Dict = dataclasses.field(default_factory=dict, compare=False,
@@ -86,6 +106,9 @@ class Schedule:
 
     # ---------------------------------------------------------------- helpers
     def valid_cells(self) -> set:
+        if self.cells is not None:
+            return {(h, kv, q) for h in range(self.n_heads)
+                    for (kv, q) in self.cells}
         cells = set()
         for h in range(self.n_heads):
             for kv in range(self.n_kv):
@@ -114,14 +137,19 @@ class Schedule:
                         f"KV row {row} split across workers/runs (paper §3.1 constraint)")
                     seen_rows[row] = w
                 prev_row = row
-        # 3. reduction orders cover each column exactly
-        for h in range(self.n_heads):
-            for q in range(self.n_q):
-                col = [(kv) for kv in range(self.n_kv)
-                       if (not self.causal) or q >= kv]
-                order = self.reduction_order[(h, q)]
-                assert sorted(kv for kv, _ in order) == sorted(col), (
-                    f"reduction order for column {(h, q)} incomplete")
+        # 3. reduction orders cover each nonempty column exactly (ragged cell
+        # sets may leave entire (h, q) columns EMPTY — those carry no order)
+        cols: Dict[Tuple[int, int], List[int]] = {}
+        for (h, kv, q) in self.valid_cells():
+            cols.setdefault((h, q), []).append(kv)
+        assert set(self.reduction_order) == set(cols), (
+            "reduction orders do not match the nonempty columns: "
+            f"extra={sorted(set(self.reduction_order) - set(cols))[:4]} "
+            f"missing={sorted(set(cols) - set(self.reduction_order))[:4]}")
+        for key, col in cols.items():
+            order = self.reduction_order[key]
+            assert sorted(kv for kv, _ in order) == sorted(col), (
+                f"reduction order for column {key} incomplete")
 
     # -------------------------------------------------------- kernel emission
     def prefetch_arrays(self, head: int = 0) -> Tuple[np.ndarray, np.ndarray]:
@@ -362,13 +390,31 @@ GENERATORS = {
 
 
 def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
-                  n_q: int | None = None) -> Schedule:
+                  n_q: int | None = None, mask=None, block_q: int = 128,
+                  block_k: int = 128) -> Schedule:
     """Uniform entry point used by kernels / CP / benchmarks.
 
     ``n_q`` reaches the rectangular-grid generators (``fa3``, ``shift``);
     ``descending`` / ``symmetric_shift`` are square by construction (their
     KV-row folds pair rows with columns) and reject a differing ``n_q``.
+
+    ``mask`` (a :class:`repro.masks.spec.MaskSpec`) routes to the block-sparse
+    compiler instead: ``name`` then selects the *placement* (``shift`` — the
+    generalized optimum — or ``fa3`` — the ascending baseline), ``n``/``n_q``
+    are tile counts and ``block_q``/``block_k`` the tile sizes the block map
+    is classified at.  Schedules are ragged single-head (the kernels' bh grid
+    axis covers batch·heads).
     """
+    if mask is not None:
+        from repro.masks.schedule import compile_block_schedule
+        if name not in ("shift", "fa3"):
+            raise ValueError(
+                f"block-sparse masks support placements ('shift', 'fa3'); "
+                f"got {name!r} (descending/symmetric_shift pair KV rows with "
+                "columns and require square triangular masks)")
+        return compile_block_schedule(mask, n_kv=n, n_q=n if n_q is None
+                                      else n_q, block_q=block_q,
+                                      block_k=block_k, placement=name)
     if name == "fa3":
         return fa3(n, n_heads, causal, n_q=n_q)
     if name in ("descending", "symmetric_shift") and n_q not in (None, n):
@@ -391,13 +437,33 @@ def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
 
 @functools.lru_cache(maxsize=256)
 def cached_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
-                    n_q: int | None = None) -> Schedule:
+                    n_q: int | None = None, mask=None, block_q: int = 128,
+                    block_k: int = 128) -> Schedule:
     """Memoized :func:`make_schedule` keyed by
-    ``(name, n_kv=n_workers=n, n_q, n_heads, causal)``.
+    ``(name, n_kv=n_workers=n, n_q, n_heads, causal, mask, block_q, block_k)``.
+
+    The **mask spec is part of the key** (specs are frozen/hashable): two
+    distinct block-sparse masks that happen to share tile counts can never be
+    handed the same cached schedule — the old ``(name, n, n_heads, causal,
+    n_q)`` key space would have silently collided there.
 
     Schedule construction + serialization is pure-python and runs on every
     kernel trace (``ops._bwd_rule`` retraces per shape/dtype combination);
     reusing one instance also shares the derived kernel arrays memoized on it
     (:meth:`Schedule.worker_chains`, ``flash_bwd.serialize_schedule``).
+    Block-sparse schedules delegate to
+    :func:`repro.masks.schedule.cached_block_schedule` so both entry points
+    hand out the *same* memoized instance per (mask, tiling, placement).
     """
-    return make_schedule(name, n, n_heads=n_heads, causal=causal, n_q=n_q)
+    if mask is not None:
+        if name not in ("shift", "fa3"):
+            # same guard as make_schedule, before touching the mask cache
+            return make_schedule(name, n, n_heads=n_heads, causal=causal,
+                                 n_q=n_q, mask=mask, block_q=block_q,
+                                 block_k=block_k)
+        from repro.masks.schedule import cached_block_schedule
+        # positional: lru_cache keys kwargs separately from positionals
+        return cached_block_schedule(mask, n, n if n_q is None else n_q,
+                                     block_q, block_k, name)
+    return make_schedule(name, n, n_heads=n_heads, causal=causal, n_q=n_q,
+                         mask=mask, block_q=block_q, block_k=block_k)

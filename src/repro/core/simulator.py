@@ -110,6 +110,34 @@ def work_lower_bound(n: int, m: int, c: float, r: float, causal: bool) -> float:
     return tasks * (c + r) / n
 
 
+def ragged_lower_bound(schedule: Schedule, c: float = 1.0,
+                       r: float = 0.5) -> float:
+    """Makespan lower bound for arbitrary (ragged / block-sparse) schedules.
+
+    Three independent bounds, any schedule ≥ each:
+      * chain bound — some worker must execute its longest row back to back:
+        ``max_chain · (c + r)``;
+      * column bound — a column's reductions are serialized in the prescribed
+        order, and the first needs a compute first: ``c + h · r`` for the
+        tallest column height ``h``;
+      * work bound — total occupancy over ``n_workers`` workers.
+
+    The generalized shift placement achieves the maximum of these whenever its
+    rotation assignment is collision-free (see
+    :mod:`repro.masks.schedule`), which certifies optimality case by case.
+    """
+    chain_b = max((len(chain) for chain in schedule.chains), default=0) * (c + r)
+    heights: Dict[Tuple[int, int], int] = {}
+    n_tasks = 0
+    for chain in schedule.chains:
+        for (h, kv, q) in chain:
+            heights[(h, q)] = heights.get((h, q), 0) + 1
+            n_tasks += 1
+    col_b = max((c + hh * r for hh in heights.values()), default=0.0)
+    work_b = n_tasks * (c + r) / max(1, schedule.n_workers)
+    return max(chain_b, col_b, work_b)
+
+
 def speedup_table(n: int, m: int, c: float, r: float):
     """Modeled throughput speedups over the fa3 deterministic baseline."""
     out = {}

@@ -91,5 +91,121 @@ class MemmapCorpus:
                 "labels": jnp.asarray(rows[:, 1:])}
 
 
+# --------------------------------------------------------------------------- #
+# deterministic sequence packing (multi-document rows + segment masks)
+# --------------------------------------------------------------------------- #
+def pack_documents(docs, seq: int, pad_id: int = 0):
+    """Greedy first-fit-in-order packer → the packed-batch format.
+
+    Pure function of (docs, seq): documents are placed in order, each into the
+    current row while it fits, else a new row opens — no randomness, no
+    dict-order dependence, so the packing layout is bitwise reproducible.
+
+    Returns a dict of int32 arrays, all (n_rows, seq):
+      ``tokens``       packed token ids, ``pad_id`` in the tail slack;
+      ``labels``       next token *within the same document*; -100 on the last
+                       token of each document and on padding (the CE mask);
+      ``segment_ids``  1-based document id per token, 0 on padding — attention
+                       masks cross-segment pairs (and padding never attends to
+                       or trains on anything);
+      ``positions``    RoPE positions restarting at 0 inside each document.
+
+    A document longer than ``seq`` is split into ``seq``-sized pieces that keep
+    distinct segment ids (no cross-piece attention — the conservative packing
+    convention; a piece boundary behaves like a document boundary).
+    """
+    pieces = []
+    for doc in docs:
+        doc = np.asarray(doc, np.int32).reshape(-1)
+        assert doc.size > 0, "empty document"
+        for s in range(0, doc.size, seq):
+            pieces.append(doc[s:s + seq])
+
+    rows, row, used = [], [], 0
+    for piece in pieces:
+        if used + piece.size > seq:
+            rows.append(row)
+            row, used = [], 0
+        row.append(piece)
+        used += piece.size
+    if row:
+        rows.append(row)
+
+    n = len(rows)
+    tokens = np.full((n, seq), pad_id, np.int32)
+    labels = np.full((n, seq), -100, np.int32)
+    segment_ids = np.zeros((n, seq), np.int32)
+    positions = np.zeros((n, seq), np.int32)
+    seg = 0
+    for r, row_pieces in enumerate(rows):
+        off = 0
+        for piece in row_pieces:
+            seg += 1
+            ln = piece.size
+            tokens[r, off:off + ln] = piece
+            labels[r, off:off + ln - 1] = piece[1:]   # last token: no target
+            segment_ids[r, off:off + ln] = seg
+            positions[r, off:off + ln] = np.arange(ln)
+            off += ln
+    return {"tokens": tokens, "labels": labels,
+            "segment_ids": segment_ids, "positions": positions}
+
+
+class PackedDocs:
+    """Synthetic packed-document source: deterministic multi-doc rows with
+    segment masks — the end-to-end driver for packed-sequence training.
+
+    Per step, document lengths and tokens are drawn from ``fold_in(seed,
+    step)`` keys (constant-size draws, same contract as the v2 sources above)
+    and packed by :func:`pack_documents` into exactly ``cfg.batch`` global
+    rows; each host takes its contiguous row slice, so host splits partition
+    one global batch (the elastic-reshard invariant).
+    """
+
+    # distinct stream tags so the doc-length and token draws never alias the
+    # SyntheticLM stream (which uses fold_in(·, 0))
+    _LEN_TAG, _TOK_TAG = 101, 102
+
+    def __init__(self, cfg: DataConfig, min_doc: int = 16,
+                 max_doc: Optional[int] = None):
+        assert cfg.batch % cfg.host_count == 0
+        self.cfg = cfg
+        self.min_doc = min_doc
+        self.max_doc = max_doc or cfg.seq // 2
+        # loud, not clamped: randint silently clamps an empty range to minval,
+        # which would quietly disable packing (one full-length doc per row)
+        assert self.min_doc <= self.max_doc <= cfg.seq, (
+            f"need min_doc <= max_doc <= seq, got "
+            f"{self.min_doc}/{self.max_doc}/{cfg.seq}")
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        c = self.cfg
+        per_host = c.batch // c.host_count
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        # CONSTANT-SIZE draws (shapes depend only on the config, never on the
+        # drawn lengths — one compiled executable serves every step). Token
+        # budget: first-fit wastes < max_doc slack per row, so docs totaling
+        # 2·batch·seq tokens always pack into ≥ batch rows (max_doc ≤ seq/2).
+        budget = 2 * c.batch * c.seq
+        n_docs = budget // self.min_doc + 1           # worst case: all minimal
+        lens = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, self._LEN_TAG), (n_docs,),
+            self.min_doc, self.max_doc + 1))
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, self._TOK_TAG),
+            (budget + self.max_doc,), 0, c.vocab, jnp.int32))
+        docs, off = [], 0
+        for ln in lens:
+            if off >= budget:
+                break                                  # token budget consumed
+            docs.append(toks[off:off + int(ln)])
+            off += int(ln)
+        packed = pack_documents(docs, c.seq)
+        assert packed["tokens"].shape[0] >= c.batch
+        h0 = c.host_index * per_host
+        return {k: jnp.asarray(v[:c.batch][h0:h0 + per_host])
+                for k, v in packed.items()}
+
+
 def make_source(cfg: DataConfig):
     return MemmapCorpus(cfg) if cfg.path else SyntheticLM(cfg)

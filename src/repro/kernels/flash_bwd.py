@@ -94,15 +94,26 @@ def first_visit_flags(kv_ids: np.ndarray, q_ids: np.ndarray) -> np.ndarray:
 # shared task math (one (kv, q) tile of Alg. 1)
 # --------------------------------------------------------------------------- #
 def _task_grads(q, k, v, do, lse, delta, kv, qi, *, sm_scale, causal,
-                block_q, block_k):
+                block_q, block_k, mask_spec=None, q_info=None, k_info=None):
     """Compute phase (DAG cost c): p/ds and the three tile contributions."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * sm_scale
+    msk = None
     if causal:
         rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         cols = kv * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(rows >= cols, s, NEG_INF)
+    elif mask_spec is not None:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        msk = mask_spec.tile_mask(rows, cols, q_info, k_info)
+        s = jnp.where(msk, s, NEG_INF)
     p = jnp.exp(s - lse[:, None])                                   # (bq, bk)
+    if msk is not None:
+        # exact-zero masked lanes (see flash_fwd._fwd_body): PARTIAL tiles
+        # contribute literal 0.0 outside the mask, so both realizations stay
+        # bitwise identical and FULL tiles run the unmasked math bit-for-bit.
+        p = p * msk.astype(jnp.float32)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)    # (bq, bk)
     ds = p * (dp - delta[:, None]) * sm_scale
@@ -120,9 +131,10 @@ def _task_grads(q, k, v, do, lse, delta, kv, qi, *, sm_scale, causal,
 # --------------------------------------------------------------------------- #
 def _bwd_kernel(kv_ids, q_ids, q_first,        # scalar prefetch (SMEM)
                 q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                qinfo_ref, kinfo_ref,
                 dq_hbm, dk_ref, dv_ref,
                 dq_scratch, sem_in, sem_out,
-                *, sm_scale, causal, block_q, block_k):
+                *, sm_scale, causal, block_q, block_k, mask_spec=None):
     b = pl.program_id(0)
     t = pl.program_id(1)
     kv = kv_ids[t]
@@ -132,7 +144,8 @@ def _bwd_kernel(kv_ids, q_ids, q_first,        # scalar prefetch (SMEM)
         q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
         v_ref[0].astype(jnp.float32), do_ref[0].astype(jnp.float32),
         lse_ref[0], delta_ref[0], kv, qi, sm_scale=sm_scale, causal=causal,
-        block_q=block_q, block_k=block_k)
+        block_q=block_q, block_k=block_k, mask_spec=mask_spec,
+        q_info=qinfo_ref[...], k_info=kinfo_ref[...])
 
     # ---- dV/dK: chain-contiguous accumulation; block stays VMEM-resident ----
     first_of_chain = jnp.logical_or(t == 0, kv_ids[jnp.maximum(t - 1, 0)] != kv)
@@ -171,18 +184,21 @@ def _bwd_kernel(kv_ids, q_ids, q_first,        # scalar prefetch (SMEM)
 
 @functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
                                              "block_k", "interpret",
-                                             "n_heads", "n_kv_heads"))
+                                             "n_heads", "n_kv_heads", "mask"))
 def _flash_bwd_call(q, k, v, do, lse, delta, kv_ids, q_ids, q_first, causal,
-                    sm_scale, block_q, block_k, interpret, n_heads, n_kv_heads):
+                    sm_scale, block_q, block_k, interpret, n_heads, n_kv_heads,
+                    mask=None):
     bh, sq, d = q.shape
     sk = k.shape[1]
     n_tasks = int(kv_ids.shape[0])
     grid = (bh, n_tasks)
     kernel = functools.partial(
         _bwd_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
-        block_k=block_k)
+        block_k=block_k, mask_spec=mask)
     kvb = functools.partial(kv_head_index, n_heads=n_heads,
                             n_kv_heads=n_kv_heads)
+    info = mask.token_info(sq) if mask is not None else None
+    info = np.zeros((sq,), np.int32) if info is None else info
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -196,6 +212,8 @@ def _flash_bwd_call(q, k, v, do, lse, delta, kv_ids, q_ids, q_first, causal,
             pl.BlockSpec((1, block_q, d), lambda b, t, kvi, qi, qf: (b, qi[t], 0)),
             pl.BlockSpec((1, block_q), lambda b, t, kvi, qi, qf: (b, qi[t])),
             pl.BlockSpec((1, block_q), lambda b, t, kvi, qi, qf: (b, qi[t])),
+            pl.BlockSpec((block_q,), lambda b, t, kvi, qi, qf: (qi[t],)),
+            pl.BlockSpec((block_k,), lambda b, t, kvi, qi, qf: (kvi[t],)),
         ],
         out_specs=[
             pl.BlockSpec(memory_space=pl.ANY),  # dq: explicit DMA RMW
@@ -220,7 +238,8 @@ def _flash_bwd_call(q, k, v, do, lse, delta, kv_ids, q_ids, q_first, causal,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(kv_ids, q_ids, q_first, q, k, v, do, lse, delta)
+    )(kv_ids, q_ids, q_first, q, k, v, do, lse, delta,
+      jnp.asarray(info), jnp.asarray(info))
     return dq, dk, dv
 
 
@@ -229,9 +248,10 @@ def _flash_bwd_call(q, k, v, do, lse, delta, kv_ids, q_ids, q_first, causal,
 # --------------------------------------------------------------------------- #
 def _worker_bwd_kernel(kv_ids, q_ids, valid, q_first,  # (W, T) scalar prefetch
                        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                       qinfo_ref, kinfo_ref,
                        dq_hbm, dk_ref, dv_ref,
                        dq_scratch, sem_in, sem_out,
-                       *, sm_scale, causal, block_q, block_k):
+                       *, sm_scale, causal, block_q, block_k, mask_spec=None):
     b = pl.program_id(0)
     w = pl.program_id(1)
     t = pl.program_id(2)
@@ -247,7 +267,8 @@ def _worker_bwd_kernel(kv_ids, q_ids, valid, q_first,  # (W, T) scalar prefetch
             q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
             v_ref[0].astype(jnp.float32), do_ref[0].astype(jnp.float32),
             lse_ref[0], delta_ref[0], kv, qi, sm_scale=sm_scale, causal=causal,
-            block_q=block_q, block_k=block_k)
+            block_q=block_q, block_k=block_k, mask_spec=mask_spec,
+            q_info=qinfo_ref[...], k_info=kinfo_ref[...])
 
         # dK/dV: the worker owns this KV row outright (§3.1), so the block is
         # private to (b, w) and stays VMEM-resident across the row's chain run.
@@ -287,19 +308,21 @@ def _worker_bwd_kernel(kv_ids, q_ids, valid, q_first,  # (W, T) scalar prefetch
 
 @functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
                                              "block_k", "interpret",
-                                             "n_heads", "n_kv_heads"))
+                                             "n_heads", "n_kv_heads", "mask"))
 def _flash_bwd_worker_call(q, k, v, do, lse, delta, kv_ids, q_ids, valid,
                            q_first, causal, sm_scale, block_q, block_k,
-                           interpret, n_heads, n_kv_heads):
+                           interpret, n_heads, n_kv_heads, mask=None):
     bh, sq, d = q.shape
     sk = k.shape[1]
     n_workers, max_chain = (int(s) for s in kv_ids.shape)
     grid = (bh, n_workers, max_chain)
     kernel = functools.partial(
         _worker_bwd_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
-        block_k=block_k)
+        block_k=block_k, mask_spec=mask)
     kvb = functools.partial(kv_head_index, n_heads=n_heads,
                             n_kv_heads=n_kv_heads)
+    info = mask.token_info(sq) if mask is not None else None
+    info = np.zeros((sq,), np.int32) if info is None else info
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
@@ -317,6 +340,10 @@ def _flash_bwd_worker_call(q, k, v, do, lse, delta, kv_ids, q_ids, valid,
                          lambda b, w, t, kvi, qi, va, qf: (b, qi[w, t])),
             pl.BlockSpec((1, block_q),
                          lambda b, w, t, kvi, qi, va, qf: (b, qi[w, t])),
+            pl.BlockSpec((block_q,),
+                         lambda b, w, t, kvi, qi, va, qf: (qi[w, t],)),
+            pl.BlockSpec((block_k,),
+                         lambda b, w, t, kvi, qi, va, qf: (kvi[w, t],)),
         ],
         out_specs=[
             pl.BlockSpec(memory_space=pl.ANY),  # dq partials: explicit DMA RMW
@@ -342,7 +369,8 @@ def _flash_bwd_worker_call(q, k, v, do, lse, delta, kv_ids, q_ids, valid,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(kv_ids, q_ids, valid, q_first, q, k, v, do, lse, delta)
+    )(kv_ids, q_ids, valid, q_first, q, k, v, do, lse, delta,
+      jnp.asarray(info), jnp.asarray(info))
     return dq_part, dk, dv
 
 
@@ -406,10 +434,18 @@ def fold_combine(partials, visited, block, interpret=False):
 def flash_bwd(q, k, v, out, lse, do, schedule: Schedule, causal=False,
               sm_scale=None, block_q=128, block_k=128, interpret=False,
               worker_parallel=True, n_heads: Optional[int] = None,
-              n_kv_heads: Optional[int] = None):
+              n_kv_heads: Optional[int] = None, mask=None):
     """DASH backward. q/do: (BH, S, D); k/v: (B·Hk, S, D) — native GQA, no
     repetition (pass ``n_heads``/``n_kv_heads`` when they differ). The
     schedule's (n_kv, n_q) must match (S // block_k, S // block_q).
+
+    ``mask``: optional :class:`repro.masks.spec.MaskSpec`; the schedule must
+    then be the mask's own compiled schedule (pinned by ``mask_key`` — two
+    distinct masks can never share a schedule or a kernel grid). EMPTY tiles
+    are absent from the schedule's ragged chains; PARTIAL tiles mask-multiply
+    with exact-zero lanes, so both realizations below stay bitwise identical
+    under any mask. KV rows the mask leaves without tasks are zeroed (their
+    output blocks are never written by the grid).
 
     ``worker_parallel=True`` (default) realizes the schedule's worker dimension
     as a parallel grid axis with the fixed-order dQ combine;
@@ -435,6 +471,14 @@ def flash_bwd(q, k, v, out, lse, do, schedule: Schedule, causal=False,
     if causal:
         assert block_q == block_k, "causal schedules assume square tiles"
     assert schedule.causal == causal
+    if mask is not None:
+        assert not causal, "mask supersedes the causal flag"
+        assert schedule.mask_key == mask.key(), (
+            f"schedule {schedule.name!r} was compiled for mask "
+            f"{schedule.mask_key}, not {mask.key()} — cache-key collision?")
+    else:
+        assert schedule.mask_key is None, (
+            "block-sparse schedule requires its mask to be passed")
     assert schedule.n_kv == sk // block_k and schedule.n_q == sq // block_q, (
         f"schedule ({schedule.n_kv}x{schedule.n_q}) != tiling "
         f"({sk // block_k}x{sq // block_q})")
@@ -456,7 +500,8 @@ def flash_bwd(q, k, v, out, lse, do, schedule: Schedule, causal=False,
             q, k, v, do, lse, delta,
             jnp.asarray(wc["kv_ids"]), jnp.asarray(wc["q_ids"]),
             jnp.asarray(wc["valid"]), jnp.asarray(wc["q_first"]),
-            causal, sm_scale, block_q, block_k, interpret, n_heads, n_kv_heads)
+            causal, sm_scale, block_q, block_k, interpret, n_heads, n_kv_heads,
+            mask=mask)
         dq = fold_combine(dq_part, wc["visited"], block_q, interpret)
     else:
         kv_ids, q_ids = serialize_schedule(schedule)
@@ -464,7 +509,20 @@ def flash_bwd(q, k, v, out, lse, do, schedule: Schedule, causal=False,
         dq, dk, dv = _flash_bwd_call(
             q, k, v, do, lse, delta, jnp.asarray(kv_ids), jnp.asarray(q_ids),
             jnp.asarray(q_first), causal, sm_scale, block_q, block_k,
-            interpret, n_heads, n_kv_heads)
+            interpret, n_heads, n_kv_heads, mask=mask)
+
+    if mask is not None and schedule.cells is not None:
+        # a KV row with no surviving tiles (e.g. keys beyond every sliding
+        # window) is never visited by the grid, so its dk/dv output block
+        # holds uninitialized memory — force the mathematically-correct zero.
+        live_rows = {kv for (kv, _q) in schedule.cells}
+        if len(live_rows) < schedule.n_kv:
+            live = np.zeros(sk, bool)
+            for kv in live_rows:
+                live[kv * block_k:(kv + 1) * block_k] = True
+            lv = jnp.asarray(live)[None, :, None]
+            dk = jnp.where(lv, dk, 0.0)
+            dv = jnp.where(lv, dv, 0.0)
 
     if group > 1:
         # dK/dV were produced per query head; fold each KV-head group in

@@ -15,7 +15,15 @@ def _logits(q, k, sm_scale):
                       k.astype(jnp.float32)) * sm_scale
 
 
-def _mask(logits, causal):
+def _mask(logits, causal, mask=None):
+    """Apply the causal triangle and/or an explicit boolean mask.
+
+    ``mask``: dense bool array broadcastable to (…, Sq, Sk) — e.g. a
+    :meth:`repro.masks.spec.MaskSpec.materialize` reference mask. Masked lanes
+    go to -inf, so they drop out of logsumexp/softmax entirely.
+    """
+    if mask is not None:
+        logits = jnp.where(jnp.asarray(mask, bool), logits, -jnp.inf)
     if not causal:
         return logits
     sq, sk = logits.shape[-2], logits.shape[-1]
@@ -23,22 +31,23 @@ def _mask(logits, causal):
     return jnp.where(msk, logits, -jnp.inf)
 
 
-def mha_fwd(q, k, v, causal=False, sm_scale=None):
+def mha_fwd(q, k, v, causal=False, sm_scale=None, mask=None):
     """Reference attention forward.
 
-    Args:  q, k, v: (BH, S, D) arrays (batch*heads flattened).
+    Args:  q, k, v: (BH, S, D) arrays (batch*heads flattened);
+           mask: optional dense bool (…, Sq, Sk) visibility mask.
     Returns: out (BH, S, D) in q.dtype, lse (BH, S) fp32.
     """
     if sm_scale is None:
         sm_scale = 1.0 / (q.shape[-1] ** 0.5)
-    s = _mask(_logits(q, k, sm_scale), causal)
+    s = _mask(_logits(q, k, sm_scale), causal, mask)
     lse = jax.nn.logsumexp(s, axis=-1)
     p = jnp.exp(s - lse[..., None])
     out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype), lse
 
 
-def mha_bwd(q, k, v, out, lse, do, causal=False, sm_scale=None):
+def mha_bwd(q, k, v, out, lse, do, causal=False, sm_scale=None, mask=None):
     """Reference backward (Algorithm 1 math, untiled).
 
     Returns dq, dk, dv in fp32.
@@ -47,7 +56,7 @@ def mha_bwd(q, k, v, out, lse, do, causal=False, sm_scale=None):
         sm_scale = 1.0 / (q.shape[-1] ** 0.5)
     qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
     dof, outf = do.astype(jnp.float32), out.astype(jnp.float32)
-    s = _mask(_logits(q, k, sm_scale), causal)
+    s = _mask(_logits(q, k, sm_scale), causal, mask)
     p = jnp.exp(s - lse[..., None])                      # (BH, Sq, Sk)
     dv = jnp.einsum("bqk,bqd->bkd", p, dof)
     dp = jnp.einsum("bqd,bkd->bqk", dof, vf)
@@ -58,10 +67,10 @@ def mha_bwd(q, k, v, out, lse, do, causal=False, sm_scale=None):
     return dq, dk, dv
 
 
-def vjp_oracle(q, k, v, do, causal=False, sm_scale=None):
+def vjp_oracle(q, k, v, do, causal=False, sm_scale=None, mask=None):
     """dq, dk, dv via jax.vjp on the plain softmax attention (independent path)."""
     def f(q_, k_, v_):
-        out, _ = mha_fwd(q_, k_, v_, causal, sm_scale)
+        out, _ = mha_fwd(q_, k_, v_, causal, sm_scale, mask=mask)
         return out.astype(jnp.float32)
     _, pull = jax.vjp(f, q.astype(jnp.float32), k.astype(jnp.float32),
                       v.astype(jnp.float32))

@@ -1,0 +1,22 @@
+"""repro.masks — block-sparse mask subsystem.
+
+The single source of truth for "which (q_tile, kv_tile) cells exist" across the
+stack: declarative :mod:`repro.masks.spec` mask specs classify tiles into
+FULL / PARTIAL / EMPTY block maps, and :mod:`repro.masks.schedule` compiles any
+block map into a deterministic :class:`repro.core.schedules.Schedule` (ragged
+worker chains + per-column reduction orders) that drives the Pallas kernels,
+the Gantt simulator and the DAG model.
+"""
+from repro.masks.spec import (EMPTY, FULL, PARTIAL, And, Causal, Document,
+                              Full, MaskSpec, Or, PrefixLM, Sink,
+                              SlidingWindow, streaming_mask)
+from repro.masks.schedule import (PLACEMENTS, cached_block_schedule,
+                                  compile_block_schedule, ragged_columns)
+
+__all__ = [
+    "EMPTY", "PARTIAL", "FULL",
+    "MaskSpec", "Full", "Causal", "SlidingWindow", "PrefixLM", "Document",
+    "Sink", "And", "Or", "streaming_mask",
+    "PLACEMENTS", "compile_block_schedule", "cached_block_schedule",
+    "ragged_columns",
+]

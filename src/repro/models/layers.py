@@ -106,8 +106,13 @@ def _project_qkv(p, xq, xkv, cfg, q_pos, kv_pos, use_rope=True):
     return q, k, v
 
 
-def _sdpa_full(q, k, v, cfg, causal):
+def _sdpa_full(q, k, v, cfg, causal, window=None, segment_ids=None):
     """(B,S,H,D)x(B,S,Hk,D) -> (B,S,H,D); dispatches to the configured impl.
+
+    ``window`` (tokens) lowers as a :class:`repro.masks.spec.SlidingWindow`
+    spec — on the pallas impl that compiles a block-sparse grid skipping every
+    out-of-window tile; ``segment_ids`` (B, S) is the dynamic packed-document
+    mask (xla path; see :func:`repro.kernels.ops.attention`).
 
     K/V stay at Hk heads end to end — both attention impls are GQA-native
     (kernel index maps / grouped einsums address KV by ``head // group``), so
@@ -120,6 +125,12 @@ def _sdpa_full(q, k, v, cfg, causal):
     over the model axis (k/v gathered): scores/out are seq-sharded — sequence-
     parallel attention, 16× less compute than replication at the cost of one
     k/v all-gather per layer (EXPERIMENTS.md §Perf, llama4 hillclimb h2)."""
+    mask = None
+    if window:
+        from repro.masks.spec import SlidingWindow
+        assert causal, "sliding windows assume causal self-attention"
+        mask = SlidingWindow(int(window))
+        causal = False  # the window spec subsumes causality
     qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,D)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
@@ -129,14 +140,18 @@ def _sdpa_full(q, k, v, cfg, causal):
         kt = shard(kt, "batch", None, None, None)
         vt = shard(vt, "batch", None, None, None)
     out = attention_op(qt, kt, vt, causal=causal, impl=cfg.attention_impl,
-                       schedule=cfg.dash_schedule, chunk_q=cfg.attn_chunk_q)
+                       schedule=cfg.dash_schedule, chunk_q=cfg.attn_chunk_q,
+                       mask=mask, segment_ids=segment_ids)
     if seq_shard:
         out = shard(out, "batch", None, "seq_sp", None)
     return jnp.swapaxes(out, 1, 2).astype(q.dtype)
 
 
-def _sdpa_decode(q, k_cache, v_cache, valid_len):
-    """One-step decode: q (B,1,H,D); caches (B,S,Hk,D); attends to [0, valid_len)."""
+def _sdpa_decode(q, k_cache, v_cache, valid_len, window=None):
+    """One-step decode: q (B,1,H,D); caches (B,S,Hk,D); attends to
+    [0, valid_len), or to the last ``window`` of it — matching
+    masks.SlidingWindow's (q-w, q] semantics so windowed training and decode
+    see the same distribution."""
     b, _, h, hd = q.shape
     s, hk = k_cache.shape[1], k_cache.shape[2]
     g = h // hk
@@ -144,14 +159,18 @@ def _sdpa_decode(q, k_cache, v_cache, valid_len):
     scores = jnp.einsum("bokgd,bskd->bkgs", qg.astype(F32),
                         k_cache.astype(F32)) / math.sqrt(hd)
     pos = jnp.arange(s)[None, None, None, :]
-    scores = jnp.where(pos < valid_len, scores, -1e30)
+    visible = pos < valid_len
+    if window:
+        visible = jnp.logical_and(visible, pos >= valid_len - window)
+    scores = jnp.where(visible, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(F32))
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
 def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
-                    causal=True, cross_x=None, window=None, paged=None):
+                    causal=True, cross_x=None, window=None, paged=None,
+                    segment_ids=None):
     """GQA attention. Modes:
       train/prefill: cache=None → full (causal or not) self/cross attention.
       decode:        cache=(k,v) (B,S,Hk,D), cache_pos scalar → 1-token step;
@@ -163,9 +182,18 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
                      batch-invariant fixed-order split-KV reduction runs
                      (:mod:`repro.kernels.decode`); serves both chunked prefill
                      and batched one-token decode.
-      window:        optional sliding-window size (attention-free beyond it).
+      window:        optional sliding-window size in tokens (defaults to
+                     ``cfg.attn_window``); honored on train/prefill (as a
+                     masks.SlidingWindow spec) AND on cached decode (the
+                     score mask keeps the last ``window`` positions), so
+                     windowed training and generation match. The paged-KV
+                     serving path refuses windows (not plumbed yet).
+      segment_ids:   optional (B, S) packed-document ids (train/prefill);
+                     cross-segment attention is masked out.
     Returns (y, new_cache).
     """
+    if window is None and cfg.attn_window:
+        window = cfg.attn_window
     b = x.shape[0]
     if positions is None:
         positions = jnp.arange(x.shape[1])[None, :]
@@ -175,6 +203,10 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
         jnp.arange(xkv.shape[1])[None, :])
 
     if paged is not None:
+        assert not window, (
+            "sliding-window attention is not plumbed through the paged-KV "
+            "serving path yet — a window-trained model would silently decode "
+            "against full history; refusing instead")
         k_pages, v_pages = cache
         q, k, v = _project_qkv(p, x, x, cfg, positions, positions, use_rope=True)
         k_flat = k.reshape((-1,) + k.shape[2:]).astype(k_pages.dtype)
@@ -189,7 +221,9 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
     if cache is None:
         q, k, v = _project_qkv(p, x, xkv, cfg, positions, kv_positions, use_rope)
         q = shard(q, "batch", "seq", "act_heads", None)
-        out = _sdpa_full(q, k, v, cfg, causal and cross_x is None)
+        out = _sdpa_full(q, k, v, cfg, causal and cross_x is None,
+                         window=window if cross_x is None else None,
+                         segment_ids=segment_ids if cross_x is None else None)
         new_cache = None
     else:
         k_cache, v_cache = cache
@@ -200,9 +234,11 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
             v_cache = jax.lax.dynamic_update_slice(
                 v_cache, v.astype(v_cache.dtype), (0, cache_pos, 0, 0))
         if x.shape[1] > 1:  # prefill-fill: full attention over the fresh k/v
-            out = _sdpa_full(q, k, v, cfg, causal and cross_x is None)
+            out = _sdpa_full(q, k, v, cfg, causal and cross_x is None,
+                             window=window if cross_x is None else None)
         else:
-            out = _sdpa_decode(q, k_cache, v_cache, cache_pos + 1)
+            out = _sdpa_decode(q, k_cache, v_cache, cache_pos + 1,
+                               window=window if cross_x is None else None)
         new_cache = (k_cache, v_cache)
 
     out = out.reshape(x.shape[:-1] + (cfg.n_heads * cfg.head_dim,))

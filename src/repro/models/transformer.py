@@ -71,7 +71,7 @@ def _moe(p, x, cfg):
 
 
 def _apply_block(p, x, cfg, kind: str, *, positions, cache, cache_pos, cross_x,
-                 causal=True, paged=None):
+                 causal=True, paged=None, segment_ids=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), F32)
     new_cache: Dict[str, Any] = {}
@@ -79,7 +79,8 @@ def _apply_block(p, x, cfg, kind: str, *, positions, cache, cache_pos, cross_x,
         h, c_attn = L.attention_block(
             p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, positions=positions,
             cache=None if cache is None else cache.get("attn"),
-            cache_pos=cache_pos, causal=causal, paged=paged)
+            cache_pos=cache_pos, causal=causal, paged=paged,
+            segment_ids=segment_ids)
         x = x + h
         x = checkpoint_name(x, "attn_out")
         if c_attn is not None:
@@ -188,7 +189,8 @@ REMAT_POLICIES = {
 
 
 def _apply_stack(blocks, x, cfg, *, positions, caches, cache_pos, cross_x,
-                 causal=True, remat=False, remat_policy="none", paged=None):
+                 causal=True, remat=False, remat_policy="none", paged=None,
+                 segment_ids=None):
     """blocks: dict of stacked param trees keyed 'b{i}_{kind}'."""
     aux_total = jnp.zeros((), F32)
     new_caches = {} if caches is not None else None
@@ -202,7 +204,7 @@ def _apply_stack(blocks, x, cfg, *, positions, caches, cache_pos, cross_x,
             x_, c_, a_ = _apply_block(p_, x_, cfg, kind, positions=positions,
                                       cache=cache_, cache_pos=cache_pos,
                                       cross_x=cross_x, causal=causal,
-                                      paged=paged)
+                                      paged=paged, segment_ids=segment_ids)
             return (x_, aux_ + a_), c_
 
         if remat:
@@ -250,16 +252,25 @@ def _embed_inputs(params, cfg, batch):
 
 
 def forward(params, batch, cfg, *, remat=False, remat_policy="none"):
-    """Train/prefill forward → (logits, aux_loss). batch['tokens']: (B, S)."""
+    """Train/prefill forward → (logits, aux_loss). batch['tokens']: (B, S).
+
+    Packed-document batches (``cfg.packed_inputs`` / the
+    ``data.pipeline.pack_documents`` format) additionally carry
+    ``positions`` (B, S) — RoPE restarts at 0 inside each document — and
+    ``segment_ids`` (B, S) — cross-document attention is masked out.
+    """
     x = _embed_inputs(params, cfg, batch)
     if cfg.pos_embed == "learned":
         x = x + params["pos_embed"][: x.shape[1]].astype(cfg.dtype)
     cross_x = (_encode(params, cfg, batch["frames"], remat=remat)
                if cfg.encoder else None)
-    positions = jnp.arange(x.shape[1])[None, :]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
     x, _, aux = _apply_stack(params["blocks"], x, cfg, positions=positions,
                              caches=None, cache_pos=None, cross_x=cross_x,
-                             remat=remat, remat_policy=remat_policy)
+                             remat=remat, remat_policy=remat_policy,
+                             segment_ids=batch.get("segment_ids"))
     x = L.apply_norm(params["ln_f"], x, cfg)
     logits = _lm_logits(params, x, cfg)
     if cfg.frontend == "vision":  # logits for text positions only

@@ -76,6 +76,11 @@ def _factored_spec(spec: P):
 def batch_pspecs(cfg: ModelConfig, rules):
     bspec = logical_to_spec(("batch", None), rules)
     out = {"tokens": bspec, "labels": bspec}
+    if cfg.packed_inputs:
+        # packed-document batches (data.pipeline.pack_documents): per-token
+        # segment ids + per-document restarting positions, sharded like tokens
+        out["segment_ids"] = bspec
+        out["positions"] = bspec
     b3 = logical_to_spec(("batch", None, None), rules)
     if cfg.frontend == "vision":
         out["vision_embeds"] = b3

@@ -27,3 +27,37 @@ def test_compare_contains_all_schedules():
     out = compare(4, 2, causal=True)
     for nm in ("fa3", "descending", "symmetric_shift"):
         assert nm in out
+
+
+# ------------------------------------------------- ragged / block-sparse masks
+def test_render_ragged_schedule_partial_hatching():
+    """Block-sparse schedules render: PARTIAL-tile tasks hatch as '%', EMPTY
+    tiles simply never appear (they are absent from the chains), and the
+    header names the mask."""
+    from repro.core.gantt import compare_masked, render_block_map
+    from repro.masks import Document, compile_block_schedule
+    mask = Document.from_lengths((12, 20))
+    sch = compile_block_schedule(mask, 8, 8, 4, 4)
+    out = render(sch, width=80)
+    assert "%" in out                       # diagonal tiles are PARTIAL
+    assert "mask=Document" in out.splitlines()[0]
+    # digits only for q tiles that are FULL under this mask
+    full_qs = {str(q % 10) for (kv, q) in sch.cells
+               if (kv, q) not in set(sch.partial_cells)}
+    assert any(d in out for d in full_qs)
+
+    bm = render_block_map(mask, 8, 8, 4, 4)
+    assert bm.count("\n") == 8              # header + one row per KV tile
+    assert "." in bm and "%" in bm and "#" in bm
+
+    both = compare_masked(mask, 8, 8, 4, 4)
+    assert "block_shift" in both and "block_fa3" in both
+
+
+def test_render_ragged_no_crash_on_empty_rows():
+    """Masks that drop whole KV rows render with only the surviving workers."""
+    from repro.masks import Document, SlidingWindow, compile_block_schedule
+    mask = Document.from_lengths((8, 24)) & SlidingWindow(8)
+    sch = compile_block_schedule(mask, 8, 8, 4, 4)
+    out = render(sch, width=60)
+    assert len(out.splitlines()) == 1 + sch.n_workers
