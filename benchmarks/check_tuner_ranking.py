@@ -1,0 +1,139 @@
+"""CI gate: the autotuner's modeled ranking is stable and lands on the
+paper-proven optima.
+
+Golden properties, re-derived per run (no stored goldens to go stale):
+  1. two *independent* enumerate+rank passes over the same geometry produce
+     the identical ranking (candidate keys in the same order) — the
+     determinism half of the tuner contract, checked without any cache;
+  2. reversing the candidate list before ranking changes nothing — the
+     ranking is a pure function of the candidate *set*, never of enumeration
+     order;
+  3. for the paper masks the winner family is the paper's analytic optimum:
+     ``shift`` on full, ``symmetric_shift`` on causal, worker-parallel
+     realization (paper §3.4 — the shift family hits the makespan lower
+     bound where a collision-free rotation exists);
+  4. for every block-sparse mask of check_mask_placement's sweep,
+     ``pick_placement`` chooses ``shift``; on the stacked-column masks
+     (document, prefix-LM — the STRICT set over there) shift's modeled
+     makespan is STRICTLY below fa3-order's, so the choice is forced, not a
+     tie-break;
+  5. the cost calibration matches ``bench_schedule_sim.rc_ratio`` — the
+     tuner and the paper-figure benchmarks model the same machine.
+
+Run by CI:  PYTHONPATH=src:. python benchmarks/check_tuner_ranking.py
+"""
+import sys
+
+from repro.masks import Document, PrefixLM, SlidingWindow, streaming_mask
+from repro.tune import (enumerate_candidates, modeled_costs, pick_placement,
+                        rank_candidates)
+from repro.tune.space import Candidate
+
+BLK = 128
+STRICT = {"document", "prefix_lm"}
+
+
+def mask_sweep():
+    # same families/sizes as check_mask_placement.py
+    for n in (4, 8, 16, 32):
+        s = n * BLK
+        yield ("sliding_window", n, SlidingWindow(max(BLK, s // 3)))
+        yield ("document", n,
+               Document.from_lengths((s // 4, s // 2, s - s // 4 - s // 2)))
+        yield ("prefix_lm", n, PrefixLM(s // 4))
+        yield ("streaming", n, streaming_mask(max(BLK, s // 4), BLK))
+
+
+def keys_of(ranked):
+    return [row["candidate"].key() for row in ranked]
+
+
+def check_registry(seq, head_dim, causal, want_family):
+    """Stability + set-purity + paper-optimal winner for one geometry."""
+    kw = dict(seq_q=seq, head_dim=head_dim, causal=causal)
+    a = rank_candidates(enumerate_candidates(**kw), **kw)
+    b = rank_candidates(enumerate_candidates(**kw), **kw)
+    if keys_of(a) != keys_of(b):
+        return "two independent rankings disagree"
+    rev = rank_candidates(tuple(reversed(enumerate_candidates(**kw))), **kw)
+    if keys_of(a) != keys_of(rev):
+        return "ranking depends on candidate enumeration order"
+    win = a[0]["candidate"]
+    if win.schedule != want_family:
+        return (f"winner family {win.schedule!r}; the paper optimum is "
+                f"{want_family!r}")
+    if not win.worker_parallel:
+        return "winner must take the worker-parallel realization"
+    return None, win, a[0]["modeled_makespan_s"]
+
+
+def check_mask(name, n, mask):
+    """pick_placement chooses shift; strictly better on the STRICT set."""
+    placement = pick_placement(mask, n, n, BLK, BLK)
+    if placement != "shift":
+        return f"pick_placement chose {placement!r}, expected 'shift'"
+    costs = {
+        p: modeled_costs(Candidate(p, BLK, BLK, True, 0),
+                         seq_q=n * BLK, seq_kv=n * BLK, head_dim=128,
+                         mask=mask)["modeled_makespan_s"]
+        for p in ("shift", "fa3")}
+    if costs["shift"] > costs["fa3"] + 1e-15:
+        return (f"shift modeled makespan ({costs['shift']:.3e}) above "
+                f"fa3-order's ({costs['fa3']:.3e})")
+    if name in STRICT and not costs["shift"] < costs["fa3"] - 1e-15:
+        return (f"shift must be STRICTLY faster than fa3-order on stacked "
+                f"ragged columns; got {costs['shift']:.3e} vs "
+                f"{costs['fa3']:.3e}")
+    return None, costs
+
+
+def main() -> int:
+    failures = []
+
+    # calibration: one machine model for the tuner and the paper figures
+    import benchmarks.bench_schedule_sim as bss
+    from repro.tune.model import task_costs
+    r_over_c = bss.rc_ratio(128, 128)
+    c2, r2 = task_costs(128, 128, 128)
+    if abs(r_over_c - r2 / c2) > 1e-9:
+        failures.append(("calibration", 0,
+                         f"tuner r/c {r2 / c2:.4f} != bench {r_over_c:.4f}"))
+        print(f"FAIL calibration: {failures[-1][2]}")
+    else:
+        print(f"ok   calibration     r/c={r2 / c2:.4f} (matches "
+              "bench_schedule_sim)")
+
+    for seq, hd, causal, family in [(1024, 128, False, "shift"),
+                                    (1024, 128, True, "symmetric_shift"),
+                                    (4096, 64, False, "shift"),
+                                    (4096, 64, True, "symmetric_shift")]:
+        res = check_registry(seq, hd, causal, family)
+        tag = f"{'causal' if causal else 'full'} s={seq} d={hd}"
+        if isinstance(res, str):
+            failures.append((tag, seq, res))
+            print(f"FAIL {tag}: {res}")
+        else:
+            _, win, mk = res
+            print(f"ok   {tag:<22}: {win.key()} "
+                  f"(modeled {mk * 1e6:.2f}us)")
+
+    for name, n, mask in mask_sweep():
+        res = check_mask(name, n, mask)
+        if isinstance(res, str):
+            failures.append((name, n, res))
+            print(f"FAIL {name} n={n}: {res}")
+        else:
+            _, costs = res
+            print(f"ok   {name:<15} n={n:>3}: shift "
+                  f"({costs['fa3'] / costs['shift']:4.2f}x vs fa3-order)")
+
+    if failures:
+        print(f"{len(failures)} tuner ranking check(s) failed",
+              file=sys.stderr)
+        return 1
+    print("all tuner ranking checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -435,10 +435,32 @@ def make_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
     raise KeyError(f"unknown schedule {name!r}; available: {sorted(GENERATORS)}")
 
 
-@functools.lru_cache(maxsize=256)
+# Explicit bound on the shared schedule memo.  256 distinct (name, tiling,
+# mask) keys is ~an order of magnitude above what a training run plus a tuner
+# sweep touches; the bound exists so a pathological caller (e.g. a sweep over
+# thousands of masks) degrades to recompilation instead of unbounded growth.
+# ``repro.masks.cache_info()`` exposes the hit/miss counters for the tracker.
+SCHEDULE_CACHE_MAXSIZE = 256
+
+
+@functools.lru_cache(maxsize=SCHEDULE_CACHE_MAXSIZE)
+def _cached_schedule(name, n, n_heads, causal, n_q, mask, block_q, block_k):
+    if mask is not None:
+        if name not in ("shift", "fa3"):
+            # same guard as make_schedule, before touching the mask cache
+            return make_schedule(name, n, n_heads=n_heads, causal=causal,
+                                 n_q=n_q, mask=mask, block_q=block_q,
+                                 block_k=block_k)
+        from repro.masks.schedule import cached_block_schedule
+        return cached_block_schedule(mask, n, n if n_q is None else n_q,
+                                     block_q, block_k, name)
+    return make_schedule(name, n, n_heads=n_heads, causal=causal, n_q=n_q,
+                         mask=mask, block_q=block_q, block_k=block_k)
+
+
 def cached_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
                     n_q: int | None = None, mask=None, block_q: int = 128,
-                    block_k: int = 128) -> Schedule:
+                    block_k: int = 128, tune: bool = False) -> Schedule:
     """Memoized :func:`make_schedule` keyed by
     ``(name, n_kv=n_workers=n, n_q, n_heads, causal, mask, block_q, block_k)``.
 
@@ -454,16 +476,23 @@ def cached_schedule(name: str, n: int, n_heads: int = 1, causal: bool = False,
     Block-sparse schedules delegate to
     :func:`repro.masks.schedule.cached_block_schedule` so both entry points
     hand out the *same* memoized instance per (mask, tiling, placement).
+
+    ``tune=True`` (block-sparse only) lets :func:`repro.tune.pick_placement`
+    resolve the placement from the modeled makespan instead of ``name`` — a
+    pure simulator comparison, so the choice is a function of the cache key,
+    never of wall-clock measurements.  The lru bound is
+    :data:`SCHEDULE_CACHE_MAXSIZE`; ``cached_schedule.cache_info()`` reports
+    hits/misses (surfaced by ``repro.masks.cache_info()``).
     """
-    if mask is not None:
-        if name not in ("shift", "fa3"):
-            # same guard as make_schedule, before touching the mask cache
-            return make_schedule(name, n, n_heads=n_heads, causal=causal,
-                                 n_q=n_q, mask=mask, block_q=block_q,
-                                 block_k=block_k)
-        from repro.masks.schedule import cached_block_schedule
-        # positional: lru_cache keys kwargs separately from positionals
-        return cached_block_schedule(mask, n, n if n_q is None else n_q,
-                                     block_q, block_k, name)
-    return make_schedule(name, n, n_heads=n_heads, causal=causal, n_q=n_q,
-                         mask=mask, block_q=block_q, block_k=block_k)
+    if tune and mask is not None:
+        from repro.tune import pick_placement
+        name = pick_placement(mask, n, n if n_q is None else n_q,
+                              block_q, block_k)
+    # normalize to positional: lru_cache keys kwargs separately
+    return _cached_schedule(name, n, n_heads, causal, n_q, mask,
+                            block_q, block_k)
+
+
+# lru introspection for repro.masks.cache_info() / tests
+cached_schedule.cache_info = _cached_schedule.cache_info
+cached_schedule.cache_clear = _cached_schedule.cache_clear

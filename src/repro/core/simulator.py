@@ -11,6 +11,11 @@ Operational semantics (matching the paper's Gantt charts):
 
 ``simulate`` returns the makespan plus utilization; ``closed_form`` returns the
 paper's analytic formulas so tests can assert exact agreement.
+
+This model is also the autotuner's ranking function: :mod:`repro.tune.model`
+scores every legal candidate with ``simulate`` at roofline-calibrated task
+costs, which is what makes sim-mode tuning a pure, bit-stable function of the
+geometry (no clock ever read).
 """
 from __future__ import annotations
 

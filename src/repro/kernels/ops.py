@@ -43,9 +43,9 @@ def _unflatten(x, b, h):
     return x.reshape(b, h, s, d)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def _dash_attention(q, k, v, causal, schedule_name, sm_scale, block, interpret,
-                    mask):
+                    mask, worker_parallel):
     out, _ = _fwd_impl(q, k, v, causal, sm_scale, block, interpret, mask)
     return out
 
@@ -61,15 +61,15 @@ def _fwd_impl(q, k, v, causal, sm_scale, block, interpret, mask=None):
 
 
 def _fwd_rule(q, k, v, causal, schedule_name, sm_scale, block, interpret,
-              mask):
+              mask, worker_parallel):
     out, lse = _fwd_impl(q, k, v, causal, sm_scale, block, interpret, mask)
     # residuals keep K/V at Hk heads: group-factor less residual memory vs the
     # old repeat-to-H path.
     return out, (q, k, v, out, lse)
 
 
-def _bwd_rule(causal, schedule_name, sm_scale, block, interpret, mask, res,
-              do):
+def _bwd_rule(causal, schedule_name, sm_scale, block, interpret, mask,
+              worker_parallel, res, do):
     q, k, v, out, lse = res
     b, h = q.shape[0], q.shape[1]
     hk = k.shape[1]
@@ -82,7 +82,8 @@ def _bwd_rule(causal, schedule_name, sm_scale, block, interpret, mask, res,
                            _flatten(out), lse, _flatten(do), schedule,
                            causal=causal, sm_scale=sm_scale, block_q=block,
                            block_k=block, interpret=interpret,
-                           n_heads=h, n_kv_heads=hk, mask=mask)
+                           n_heads=h, n_kv_heads=hk, mask=mask,
+                           worker_parallel=worker_parallel)
     return (_unflatten(dq, b, h).astype(q.dtype),
             _unflatten(dk, b, hk).astype(k.dtype),
             _unflatten(dv, b, hk).astype(v.dtype))
@@ -94,7 +95,8 @@ _dash_attention.defvjp(_fwd_rule, _bwd_rule)
 def dash_attention(q, k, v, causal: bool = False,
                    schedule: str = "symmetric_shift_or_shift",
                    sm_scale: Optional[float] = None, block: int = 128,
-                   interpret: bool = False, mask=None):
+                   interpret: bool = False, mask=None, tune=False,
+                   worker_parallel: bool = True):
     """DASH attention with deterministic scheduled backward.
 
     Args:
@@ -110,6 +112,16 @@ def dash_attention(q, k, v, causal: bool = False,
         For block-sparse masks this selects the *placement*: "shift" (the
         generalized optimum) or "fa3" (ascending baseline).
       block: square tile size (MXU-aligned; 128 default).
+      tune: ``True``/"sim" lets :func:`repro.tune.tune_attention` resolve
+        (schedule, block, worker_parallel) from the modeled makespan for this
+        (shape, dtype, mask) key; "measure" additionally times the top
+        candidates (needs a tuner cache populated by a measured run — falls
+        back to sim ranking otherwise).  Tuning only *selects* knobs: the
+        tuned call is bitwise identical to the hand-configured call with the
+        same resolved (schedule, block, worker_parallel).
+      worker_parallel: realize the backward across schedule worker chains
+        (bitwise-equal to serialized when the schedule is single-visit;
+        auto-degrades otherwise).  Overridden by ``tune``.
     Returns: (B, H, S, D) attention output.
     """
     b, h, s, d = q.shape
@@ -126,6 +138,16 @@ def dash_attention(q, k, v, causal: bool = False,
             causal, mask = True, None
         else:
             assert not causal, "mask supersedes the causal flag"
+    if tune:
+        from repro.tune import tune_attention
+        result = tune_attention(seq=s, head_dim=d, dtype=q.dtype,
+                                causal=causal, mask=mask, n_heads=h,
+                                n_kv_heads=k.shape[1],
+                                mode=("sim" if tune is True else tune))
+        cand = result.candidate
+        schedule = cand.schedule
+        block = cand.block_q          # candidates are square-tiled
+        worker_parallel = cand.worker_parallel
     if schedule == "symmetric_shift_or_shift":
         schedule = ("shift" if mask is not None else
                     "symmetric_shift" if causal else "shift")
@@ -134,7 +156,7 @@ def dash_attention(q, k, v, causal: bool = False,
             f"block-sparse masks take placement 'shift' or 'fa3'; got "
             f"{schedule!r}")
     return _dash_attention(q, k, v, causal, schedule, sm_scale, block,
-                           interpret, mask)
+                           interpret, mask, worker_parallel)
 
 
 def _grouped_logits_mask(logits, causal):
@@ -296,7 +318,8 @@ def _chunked(q, k, v, causal, sm_scale, chunk_q, score_eq, out_eq, mask=None,
 def attention(q, k, v, causal: bool = False, impl: str = "xla",
               schedule: str = "symmetric_shift_or_shift",
               sm_scale: Optional[float] = None, interpret: bool = False,
-              chunk_q: Optional[int] = None, mask=None, segment_ids=None):
+              chunk_q: Optional[int] = None, mask=None, segment_ids=None,
+              tune=False):
     """Model-facing dispatcher; see module docstring.
 
     Validates GQA group divisibility up front: q carries ``n_heads`` heads, k/v
@@ -313,5 +336,5 @@ def attention(q, k, v, causal: bool = False, impl: str = "xla",
                              mask=mask, segment_ids=segment_ids)
     if impl == "pallas":
         return dash_attention(q, k, v, causal, schedule, sm_scale,
-                              interpret=interpret, mask=mask)
+                              interpret=interpret, mask=mask, tune=tune)
     raise ValueError(f"unknown attention impl {impl!r}")

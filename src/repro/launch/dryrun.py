@@ -194,7 +194,8 @@ def _scale_layers(cfg, n_rep: int):
 
 # ----------------------------------------------------------------- one cell
 def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
-             rules_name: str = None, tag: str = "", overrides: dict = None):
+             rules_name: str = None, tag: str = "", overrides: dict = None,
+             tracker=None):
     mesh_name = "2x16x16" if multi_pod else "16x16"
     os.makedirs(ART_DIR, exist_ok=True)
     art_path = os.path.join(
@@ -285,6 +286,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
         "opt_state_dtype": tcfg.opt.state_dtype,
     }
     json.dump(art, open(art_path, "w"), indent=1)
+    if tracker is not None:
+        tracker.log("dryrun_cell", {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "rules": rules_name, "compile_s": art["compile_s"],
+            "flops": art["flops"], "bytes_accessed": art["bytes_accessed"]})
     print(f"[ok] {arch} × {shape_name} × {mesh_name} rules={rules_name} "
           f"compile={art['compile_s']}s flops={art['flops']:.3e} "
           f"coll={sum(art['collective_bytes'].values()):.3e}B")
@@ -307,7 +313,13 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--set", action="append", default=[], dest="overrides",
                     help="ModelConfig override key=value (hillclimb experiments)")
+    ap.add_argument("--track", default=None, metavar="JSONL",
+                    help="log one repro.obs 'dryrun_cell' event per compiled "
+                         "cell (compile time + cost analysis headline)")
     args = ap.parse_args()
+
+    from repro.obs import open_tracker
+    tracker = open_tracker(args.track) if args.track else None
 
     overrides = {}
     for kv in args.overrides:
@@ -335,10 +347,12 @@ def main():
                 try:
                     run_cell(arch, shape_name, mp, force=args.force,
                              rules_name=args.rules, tag=args.tag,
-                             overrides=overrides)
+                             overrides=overrides, tracker=tracker)
                 except Exception as e:  # noqa: BLE001 — record and continue
                     traceback.print_exc()
                     failures.append((arch, shape_name, mp, str(e)[:200]))
+    if tracker is not None:
+        tracker.close()
     if failures:
         print("\nFAILURES:")
         for f in failures:

@@ -63,6 +63,22 @@ def main(argv=None):
                          "<ckpt-dir>/digest_chain.json or ./digest_chain.json)")
     ap.add_argument("--heartbeat", action="store_true",
                     help="enable straggler/hang monitor (launch/heartbeat.py)")
+    ap.add_argument("--tune", default="off", choices=["off", "sim", "measure"],
+                    help="resolve the attention schedule knobs with "
+                         "repro.tune before training: 'sim' ranks by modeled "
+                         "makespan (pure, reproducible); 'measure' also times "
+                         "the top candidates when a runner/cache is available "
+                         "(falls back to sim ranking here). The choice is "
+                         "logged and feeds the utilization-vs-modeled metric.")
+    ap.add_argument("--track", default=None, metavar="JSONL",
+                    help="write a repro.obs event stream here: per-step "
+                         "throughput, utilization-vs-modeled, fingerprint + "
+                         "divergence events (with --verify), tuner decisions")
+    ap.add_argument("--track-reference", default=None, metavar="JSONL",
+                    help="a previous run's --track file; with --verify, the "
+                         "live fingerprint stream is compared against it and "
+                         "the first mismatch fires a fingerprint_divergence "
+                         "event")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -72,6 +88,35 @@ def main(argv=None):
                           n_layers=12 * len(cfg.block_pattern))
     elif args.reduced:
         cfg = cfg.reduced()
+
+    from repro.obs import DivergenceAlarm, StepMeter, open_tracker
+    tracker = open_tracker(args.track)
+    tracker.log("run_config", {
+        "arch": args.arch, "steps": args.steps, "batch": args.batch,
+        "seq": args.seq, "microbatches": args.microbatches,
+        "seed": args.seed, "tune": args.tune, "verify": bool(args.verify)})
+
+    modeled_step_s = None
+    if args.tune != "off":
+        from repro.tune import tune_attention
+        tres = tune_attention(seq=args.seq, head_dim=cfg.head_dim,
+                              dtype=cfg.dtype_name, causal=True,
+                              n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                              mode=args.tune, tracker=tracker)
+        n_rep = cfg.n_layers // len(cfg.block_pattern)
+        n_attn = n_rep * sum(1 for k in cfg.block_pattern
+                             if k.startswith("attn"))
+        # attention-only modeled step time: one schedule's makespan × every
+        # (layer, batch, head) grid instance, fwd+bwd already in the task
+        # costs.  The utilization-vs-modeled metric divides this by measured
+        # wall per step — honest about being an attention-work model, not a
+        # full-model roofline.
+        modeled_step_s = (tres.modeled_makespan_s * n_attn * args.batch
+                          * cfg.n_heads) or None
+        print(f"[tune] {tres.candidate.key()} source={tres.source} "
+              f"modeled_makespan={tres.modeled_makespan_s:.3e}s "
+              f"modeled_step(attn)={modeled_step_s or 0:.3e}s", flush=True)
+
     tcfg = S.TrainConfig(
         opt=O.OptConfig(name=args.opt, lr=args.lr, total_steps=args.steps),
         microbatches=args.microbatches, remat=True,
@@ -123,11 +168,20 @@ def main(argv=None):
         with open(chain_path, "w") as f:
             f.write(chain.to_json())
 
+    alarm = None
+    if args.verify:
+        alarm = (DivergenceAlarm.from_jsonl(args.track_reference,
+                                            tracker=tracker)
+                 if args.track_reference else DivergenceAlarm(tracker=tracker))
+
     monitor = None
     if args.heartbeat:
         from repro.launch.heartbeat import Monitor
         monitor = Monitor(on_hang=lambda: os._exit(42))
         monitor.start_watchdog()
+    meter = StepMeter(modeled_step_s=modeled_step_s)
+    tracking = args.track is not None
+    tokens_per_step = args.batch * args.seq
     pending = None
     t0 = time.time()
     for step in range(start, args.steps):
@@ -145,6 +199,17 @@ def main(argv=None):
                 print(f"[heartbeat] straggler step {step} "
                       f"({time.time() - ts:.2f}s vs baseline "
                       f"{monitor.baseline:.2f}s)", flush=True)
+        if tracking:
+            # block before reading the clock: the event times real step work,
+            # not dispatch. The sync only happens when --track asked for it.
+            jax.block_until_ready(metrics["loss"])
+            payload = meter.update(tokens_per_step, time.time() - ts)
+            payload.update(S.step_event(metrics))
+            tracker.log("step", payload, step=step + 1)
+        if alarm is not None and "state_fingerprint" in metrics:
+            if alarm.observe(step + 1, metrics["state_fingerprint"]):
+                print(f"[verify] fingerprint divergence at step {step + 1} "
+                      f"(see tracker)", flush=True)
         if (step + 1) % args.log_every == 0 or step == start:
             m = {k: float(v) for k, v in metrics.items()}
             dt = (time.time() - t0) / max(1, step + 1 - start)
@@ -168,6 +233,15 @@ def main(argv=None):
         print(f"[verify] digest chain head {chain.head} "
               f"({len(chain)} records) -> {chain_path}", flush=True)
         summary["digest_chain_head"] = chain.head
+    if alarm is not None:
+        summary["fingerprint_ok"] = alarm.ok
+    if tracking:
+        from repro.masks import cache_info
+        tracker.log("cache_info", cache_info())
+        tracker.log("run_summary", dict(summary,
+                                        tokens_per_s_avg=meter.event()
+                                        .get("tokens_per_s_avg", 0.0)))
+    tracker.close()
     print(json.dumps(summary))
     return final_loss
 

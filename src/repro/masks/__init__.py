@@ -13,10 +13,28 @@ from repro.masks.spec import (EMPTY, FULL, PARTIAL, And, Causal, Document,
 from repro.masks.schedule import (PLACEMENTS, cached_block_schedule,
                                   compile_block_schedule, ragged_columns)
 
+
+def cache_info():
+    """lru statistics for every schedule/block-map memo in the stack, keyed by
+    cache name — ``{"hits", "misses", "maxsize", "currsize"}`` each.
+
+    The caches are the levers that keep schedule compilation off the step
+    path; the tracker's ``cache_info`` event (``launch/train.py --track``)
+    snapshots this so a run's artifact records whether schedules were reused
+    or recompiled (a miss storm on a fixed shape set is a key-space bug)."""
+    from repro.core.schedules import cached_schedule
+    from repro.masks.spec import _block_map
+    return {
+        "cached_schedule": cached_schedule.cache_info()._asdict(),
+        "cached_block_schedule": cached_block_schedule.cache_info()._asdict(),
+        "block_map": _block_map.cache_info()._asdict(),
+    }
+
+
 __all__ = [
     "EMPTY", "PARTIAL", "FULL",
     "MaskSpec", "Full", "Causal", "SlidingWindow", "PrefixLM", "Document",
     "Sink", "And", "Or", "streaming_mask",
     "PLACEMENTS", "compile_block_schedule", "cached_block_schedule",
-    "ragged_columns",
+    "ragged_columns", "cache_info",
 ]

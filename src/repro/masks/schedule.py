@@ -47,7 +47,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.schedules import Schedule
+from repro.core.schedules import SCHEDULE_CACHE_MAXSIZE, Schedule
 from repro.masks.spec import EMPTY, PARTIAL, MaskSpec
 
 PLACEMENTS = ("shift", "fa3")
@@ -146,12 +146,33 @@ def compile_block_schedule(mask: MaskSpec, n_kv: int, n_q: int,
     return sch
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=SCHEDULE_CACHE_MAXSIZE)
+def _cached_block_schedule(mask, n_kv, n_q, block_q, block_k, placement):
+    return compile_block_schedule(mask, n_kv, n_q, block_q, block_k, placement)
+
+
 def cached_block_schedule(mask: MaskSpec, n_kv: int, n_q: int,
                           block_q: int = 128, block_k: int = 128,
-                          placement: str = "shift") -> Schedule:
+                          placement: str = "shift",
+                          tune: bool = False) -> Schedule:
     """Memoized :func:`compile_block_schedule`. The lru key includes the mask
     spec itself (hashable by construction), so two distinct masks with equal
     tile counts can never collide — the failure mode the old
-    ``(name, n, n_heads, causal, n_q)`` key space allowed."""
-    return compile_block_schedule(mask, n_kv, n_q, block_q, block_k, placement)
+    ``(name, n, n_heads, causal, n_q)`` key space allowed.
+
+    ``tune=True`` asks :func:`repro.tune.pick_placement` to choose the
+    placement from the modeled makespan (shift vs fa3 under the simulator) —
+    deterministic, because the comparison is a pure function of the mask's
+    block map, and sticky, because the resolved placement lands on the same
+    lru key a hand-picked call would.  The lru bound is
+    :data:`repro.core.schedules.SCHEDULE_CACHE_MAXSIZE`; hit/miss counters
+    surface through ``repro.masks.cache_info()``."""
+    if tune:
+        from repro.tune import pick_placement
+        placement = pick_placement(mask, n_kv, n_q, block_q, block_k)
+    return _cached_block_schedule(mask, n_kv, n_q, block_q, block_k, placement)
+
+
+# lru introspection for repro.masks.cache_info() / tests
+cached_block_schedule.cache_info = _cached_block_schedule.cache_info
+cached_block_schedule.cache_clear = _cached_block_schedule.cache_clear

@@ -1,0 +1,35 @@
+"""repro.obs — run-wide metrics and tracing (ROADMAP item 5, Levanter
+``tracker/`` style).
+
+A heavy-traffic deterministic deployment needs three live signals from every
+train/serve run: throughput (tokens/s), achieved-vs-modeled-makespan
+utilization (is the hardware delivering what the DAG model says the schedule
+can?), and digest divergence (did two runs that must be bitwise equal stop
+being so — HEAL's instability failure mode, caught while the run is live).
+
+  :mod:`repro.obs.tracker`   the event sink protocol + ``JsonlTracker`` /
+                             ``NoopTracker`` / ``CompositeTracker``;
+  :mod:`repro.obs.metrics`   counters / timers / histograms and the
+                             ``StepMeter`` throughput+utilization aggregator;
+  :mod:`repro.obs.alarm`     ``DivergenceAlarm`` — compares the live uint32
+                             ``verify.digest.tree_fingerprint`` stream against
+                             a reference run and fires a tracker event at the
+                             first diverging step.
+
+Event stream format: JSON Lines, one object per event, sorted keys, with a
+monotone ``seq`` number — see README §Observability for the schema.  Trackers
+are host-side only and must never appear inside jitted code; producers hand
+them already-materialized scalars.
+"""
+from repro.obs.alarm import DivergenceAlarm
+from repro.obs.metrics import (Counter, Histogram, StepMeter, Timer,
+                               utilization_vs_modeled)
+from repro.obs.tracker import (CompositeTracker, JsonlTracker, MemoryTracker,
+                               NoopTracker, Tracker, open_tracker, read_jsonl)
+
+__all__ = [
+    "Tracker", "JsonlTracker", "NoopTracker", "CompositeTracker",
+    "MemoryTracker", "open_tracker", "read_jsonl",
+    "Counter", "Timer", "Histogram", "StepMeter", "utilization_vs_modeled",
+    "DivergenceAlarm",
+]

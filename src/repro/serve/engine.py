@@ -163,11 +163,19 @@ class ContinuousEngine:
 
     def __init__(self, cfg, params, *, n_slots: int = 4, max_seq: int = 128,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 prefill_chunk: int = 32, scfg: SampleConfig = SampleConfig()):
+                 prefill_chunk: int = 32, scfg: SampleConfig = SampleConfig(),
+                 tracker=None):
         assert T.supports_paged(cfg), (
             "paged serving covers decoder-only, attention-only LMs")
         assert max_seq % page_size == 0 and prefill_chunk >= 1
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        # observation only: every tracker call logs host-side ints already
+        # computed for the step — swapping the tracker can never change a
+        # token (tests/test_obs.py proves it on a full run)
+        if tracker is None:
+            from repro.obs.tracker import NoopTracker
+            tracker = NoopTracker()
+        self.tracker = tracker
         self.prefill_chunk = prefill_chunk
         self.max_seq = max_seq
         mpps = max_seq // page_size
@@ -211,6 +219,9 @@ class ContinuousEngine:
                 f"request")
         self.sched.submit(Request(req_id, tokens, max_new_tokens))
         self._next_id = max(self._next_id, req_id + 1)   # only after validation
+        self.tracker.log("serve_submit", {
+            "request_id": req_id, "prompt_len": len(tokens),
+            "max_new_tokens": max_new_tokens})
         return req_id
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -265,6 +276,9 @@ class ContinuousEngine:
                               jnp.asarray([req.id], jnp.int32),
                               jnp.asarray([0], jnp.int32))
         self._slots[slot] = st = _Active(req, [int(first[0])])
+        self.tracker.log("serve_prefill", {
+            "request_id": req.id, "slot": slot, "prompt_len": plen,
+            "chunks": -(-plen // C)})
         self._finish_check(st)
 
     def _finish_check(self, st: _Active) -> None:
@@ -307,9 +321,15 @@ class ContinuousEngine:
                 st = self._slots[s]
                 st.produced.append(int(nxt[s]))
                 self._finish_check(st)
+            self.tracker.log("serve_decode", {"live_slots": len(live)},
+                             step=self.decode_steps)
 
         for s in [s for s, st in self._slots.items() if st.done]:
             st = self._slots.pop(s)
             self.results[st.req.id] = st.produced
             self.cache.free_slot(s)
             self.sched.release(s)
+            self.tracker.log("serve_done", {
+                "request_id": st.req.id, "slot": s,
+                "n_tokens": len(st.produced),
+                "decode_steps": self.decode_steps})

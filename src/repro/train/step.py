@@ -142,6 +142,21 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     return step
 
 
+def step_event(metrics: Dict[str, Any],
+               keys: Tuple[str, ...] = ("loss", "grad_norm", "lr")
+               ) -> Dict[str, float]:
+    """Materialize one step's training metrics into a tracker payload.
+
+    Host-side only (``repro.obs`` trackers never see traced values): pulling
+    ``float()`` here is the single device sync, performed after the caller
+    decided this step gets logged.  The uint32 ``state_fingerprint`` is
+    deliberately excluded — it flows through
+    :meth:`repro.obs.DivergenceAlarm.observe`, which owns the ``fingerprint``
+    event and the divergence latch.
+    """
+    return {k: float(metrics[k]) for k in keys if k in metrics}
+
+
 # --------------------------------------------------------------------- serve
 def make_serve_step(cfg: ModelConfig):
     """decode step: (params, caches, batch, cache_pos[, cross_x]) → (logits, caches)."""

@@ -1,0 +1,42 @@
+"""repro.tune — deterministic schedule autotuner (ROADMAP item 5).
+
+Picks the fastest *legal* DASH configuration — schedule family (or block-sparse
+placement), square block size, worker count, and serialized vs worker-parallel
+realization — instead of leaving those knobs to call sites.  The pipeline:
+
+  :mod:`repro.tune.space`    enumerate legal candidates (mask block map +
+                             VMEM budget via :mod:`repro.kernels.vmem`);
+  :mod:`repro.tune.model`    rank them by :mod:`repro.core.simulator` modeled
+                             makespan at physically calibrated task costs —
+                             pure python, no hardware, bit-stable;
+  :mod:`repro.tune.measure`  optionally time the top-k on hardware with fixed
+                             warmup/rep counts and a deterministic tie-break
+                             (modeled makespan, then candidate key — wall-clock
+                             jitter can never pick between near-equal times);
+  :mod:`repro.tune.cache`    persist the winner in a content-addressed JSON
+                             store keyed like ``cached_schedule`` (mask hash,
+                             shape, dtype, worker budget, backend, tuner
+                             version) so the same machine always re-picks the
+                             same candidate.
+
+Tuning is **bitwise-safe by construction**: the tuner only *resolves knobs* and
+then calls exactly the code path a hand-configured call would take —
+``dash_attention(tune=True)`` is bitwise identical to the equivalent
+hand-configured ``dash_attention(schedule=…, block=…, worker_parallel=…)``
+(tests/test_tune.py proves it on registry configs).  The tuner — not the call
+site — owns realization and (via ``backend`` in the cache key) the seam for a
+second kernel backend later.
+"""
+from repro.tune.api import TuneResult, pick_placement, tune_attention
+from repro.tune.cache import TUNER_VERSION, TuneCache, default_cache, make_key
+from repro.tune.measure import measure_topk
+from repro.tune.model import modeled_costs, rank_candidates, task_costs
+from repro.tune.space import Candidate, enumerate_candidates, legal_blocks
+
+__all__ = [
+    "Candidate", "enumerate_candidates", "legal_blocks",
+    "task_costs", "modeled_costs", "rank_candidates",
+    "measure_topk",
+    "TUNER_VERSION", "TuneCache", "default_cache", "make_key",
+    "TuneResult", "tune_attention", "pick_placement",
+]
