@@ -7,6 +7,13 @@ over a 4-slot engine relative to static single-stream decode; the acceptance
 bar (ISSUE 2) is >= 2x.  The continuous engine pays for its determinism
 bookkeeping (host page tables, per-request sampling keys) with in-flight
 batching: 4 requests advance per device dispatch instead of 1.
+
+The ``tp`` axis (``continuous_tp{n}_decode_tps``) times the same engine
+sharded over an n-way model mesh for every n ≤ len(jax.devices()) in
+{1, 2, 4}, asserting the emitted tokens stay bitwise equal to the
+single-device run (the topology-invariance contract) — on a plain 1-CPU CI
+host only tp1 runs; the sharded-serve CI job forces 4 host devices to cover
+the full axis.
 """
 import json
 import os
@@ -57,13 +64,15 @@ def main() -> None:
         _row(f"serve_static_b{b}_decode", dt / (b * GEN) * 1e6, f"{tps:.0f}tok/s")
 
     # ---- continuous engine: N_REQ requests over SLOTS slots ----------------
-    def build():
+    prompts = [rng.randint(1, cfg.vocab, size=PROMPT).tolist()
+               for _ in range(N_REQ)]
+
+    def build(mesh=None):
         eng = ContinuousEngine(cfg, params, n_slots=SLOTS,
                                max_seq=PROMPT + GEN + 16, page_size=16,
-                               prefill_chunk=PROMPT)
+                               prefill_chunk=PROMPT, mesh=mesh)
         for i in range(N_REQ):
-            eng.submit(rng.randint(1, cfg.vocab, size=PROMPT).tolist(),
-                       req_id=i, max_new_tokens=GEN)
+            eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
         return eng
 
     build().run()                                       # compile both shapes
@@ -80,6 +89,27 @@ def main() -> None:
     ratio = tps / results["cases"]["static_b1_decode_tps"]
     results["cases"]["continuous_vs_static_b1"] = ratio
     _row("serve_continuous_vs_static_b1", 0, f"{ratio:.2f}x")
+
+    # ---- tp axis: sharded engine, tokens asserted bitwise vs. out ----------
+    base_tokens = {r: v.tolist() for r, v in out.items()}
+    devs = np.array(jax.devices())
+    tps_axis = [n for n in (1, 2, 4) if n <= len(devs)]
+    results["tp_degrees"] = tps_axis
+    for n in tps_axis:
+        mesh = jax.sharding.Mesh(devs[:n], ("model",))
+        build(mesh).run()                               # compile
+        eng = build(mesh)
+        t0 = time.perf_counter()
+        out_tp = eng.run()
+        dt = time.perf_counter() - t0
+        for r, v in out_tp.items():
+            assert v.tolist() == base_tokens[r], (
+                f"tp{n} tokens diverged from single-device on request {r}")
+        tp_tps = sum(len(v) for v in out_tp.values()) / dt
+        results["cases"][f"continuous_tp{n}_decode_tps"] = tp_tps
+        _row(f"serve_continuous_tp{n}", dt * 1e6 / max(1, GEN * N_REQ),
+             f"{tp_tps:.0f}tok/s,bitwise")
+
     with open(ART, "w") as f:
         json.dump(results, f, indent=1)
 

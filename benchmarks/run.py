@@ -118,7 +118,10 @@ def summarize():
             "serve", "continuous vs static-b1 decode throughput",
             cases.get("continuous_vs_static_b1"), "x",
             decode_tps=cases.get("continuous_s4_decode_tps"),
-            n_slots=bs.get("n_slots")))
+            n_slots=bs.get("n_slots"),
+            # sharded-engine axis (tokens bitwise == single-device per run)
+            tp_decode_tps={f"tp{n}": cases.get(f"continuous_tp{n}_decode_tps")
+                           for n in bs.get("tp_degrees", [])}))
 
     summary = {"suites": rows, "source": "benchmarks/run.py summarize()"}
     with open(SUMMARY_PATH, "w") as f:

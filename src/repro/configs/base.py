@@ -71,6 +71,13 @@ class ModelConfig:
                                    # (no unordered scatter-add); False restores
                                    # the gather-grad scatter — flagged by
                                    # repro.verify.trace
+    canonical_reductions: int = 0  # 0 = fused XLA reductions (training
+                                   # default). N>0 = serve-canonical mode:
+                                   # forward() runs under dist.fold's
+                                   # topology-invariant fold discipline with an
+                                   # N-token paged attention walk, bitwise
+                                   # matching ContinuousEngine prefill at
+                                   # page_size=N (train≡serve parity)
 
     @property
     def head_dim(self) -> int:

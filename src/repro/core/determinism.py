@@ -11,6 +11,14 @@ is a pure function of (inputs, declared order) — the substrate for:
   * cross-device gradient accumulation with a mesh-size-independent association
     (sequential or fixed-arity tree), enabling bitwise-reproducible elastic restarts,
   * the Table-1 style experiments (ordered vs. permuted accumulation deviation).
+
+Scope note: ``ring_ordered_psum`` below pins the association *per topology*
+(ascending device index — run-to-run stable for a fixed mesh, but a 2-device
+ring and a 4-device ring fold different partials).  When the answer must be
+identical *across* topologies — the serving contract — use
+:func:`repro.dist.fold.fixed_fold_psum`, which folds a canonical virtual-shard
+grid in a device-count-independent order and degenerates to
+:func:`ordered_sum` on one device.
 """
 from __future__ import annotations
 

@@ -9,6 +9,12 @@ workers) to cross-chip execution:
   ring_attention  context-parallel ring attention whose per-device step order
                   IS the paper's shift (full-mask) / symmetric-shift-via-zigzag
                   (causal) schedule — bitwise-deterministic fwd and bwd.
+  fold            *topology-invariant* reductions for sharded serving:
+                  ``fixed_fold_psum`` folds a canonical virtual-shard grid in
+                  a mesh-independent order (TP=2 computes the same association
+                  as TP=4 and as one device), ``canonical_row_dot`` applies it
+                  to row-parallel projections, ``canonical_scope`` threads the
+                  discipline through the model without signature changes.
   pipeline        GPipe-style pipeline parallelism over a stage mesh axis with
                   the analytic bubble fraction (the §3.2 startup-term analogue).
   compression     deterministic blockwise-int8 gradient compression with

@@ -29,6 +29,13 @@ KV block around the full ring) reductions all happen in the fixed schedule
 order under ``lax.scan`` — bitwise run-to-run reproducible, the cross-chip
 analogue of the paper's Table-1 property and of the concern in
 "Deterministic Inference across Tensor Parallel Sizes" (PAPERS.md).
+
+Note the grade of guarantee: the ring order is *per-topology* deterministic —
+fixed mesh, fixed bits — but resizing the ring re-associates the softmax
+accumulation.  The serving path needs the stronger *topology-invariant* grade
+(same bits for every TP degree); that is :func:`repro.dist.fold.fixed_fold_psum`,
+which folds a canonical mesh-independent virtual-shard grid instead of
+per-device partials.
 """
 from __future__ import annotations
 

@@ -48,7 +48,9 @@ def page_reduction_order(max_pages: int) -> np.ndarray:
 
 
 def paged_attention(q, k_pages, v_pages, page_table, q_positions,
-                    sm_scale: Optional[float] = None):
+                    sm_scale: Optional[float] = None, *,
+                    window: Optional[int] = None,
+                    q_segments=None, kv_segments=None):
     """Attention over a paged KV pool, batch-invariant per query row.
 
     Args:
@@ -60,6 +62,16 @@ def paged_attention(q, k_pages, v_pages, page_table, q_positions,
         logical positions ``<= q_positions[b, l]`` (invalid/pad rows may carry
         any position; their output is garbage the caller must mask).
       sm_scale: optional softmax scale (default 1/sqrt(D)).
+      window: optional sliding-window size in tokens — row additionally
+        restricted to logical positions ``> q_positions[b, l] - window``,
+        matching ``layers._sdpa_decode`` / ``masks.SlidingWindow``'s (q−w, q]
+        semantics.  The page walk still visits every page in the fixed order
+        (out-of-window lanes contribute exact zeros via the same mask
+        discipline), so windowing never perturbs the reduction order.
+      q_segments: optional (B, L) int32 packed-document ids per query row.
+      kv_segments: optional (P, page_size) int32 document ids per pool token
+        (pool-shaped, gathered through the page table like K/V); cross-segment
+        lanes are masked to exact zeros.  Both or neither must be given.
 
     Returns:
       (B, L, H, D) in q.dtype.
@@ -67,6 +79,9 @@ def paged_attention(q, k_pages, v_pages, page_table, q_positions,
     b, l, h, d = q.shape
     n_pages, page_size, hk, _ = k_pages.shape
     assert h % hk == 0, (h, hk)
+    assert (q_segments is None) == (kv_segments is None), \
+        "segment masking needs both q_segments and kv_segments"
+    assert window is None or window > 0, window
     g = h // hk
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
@@ -85,6 +100,14 @@ def paged_attention(q, k_pages, v_pages, page_table, q_positions,
                             preferred_element_type=jnp.float32)  # (B,L,Hk,g,ps)
         kv_pos = j * page_size + in_page                        # logical positions
         mask = kv_pos[None, None, None, None, :] <= qpos        # (B,L,1,1,ps)
+        if window is not None:
+            mask = jnp.logical_and(
+                mask, kv_pos[None, None, None, None, :] > qpos - window)
+        if q_segments is not None:
+            seg = kv_segments[phys]                             # (B, ps)
+            mask = jnp.logical_and(
+                mask, q_segments[:, :, None, None, None]
+                == seg[:, None, None, None, :])
         s_masked = jnp.where(mask, scores, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s_masked, axis=-1))
         # exact-zero discipline: exp(NEG-m) may underflow to 0 anyway, but the

@@ -10,6 +10,16 @@ cells lower at 32k/500k scale; the continuous path drives the batch-invariant
 deterministic engine (``repro.serve.ContinuousEngine`` — README §Serving):
 chunked prefill + in-flight batched decode over paged KV cache slots, with
 per-request tokens that are bitwise independent of co-batching.
+
+``--tp N`` shards the continuous engine over an N-way model-parallel mesh
+(``repro.serve.sharded``); ``--mesh RxC`` uses an (R, C) ``(data, model)``
+mesh instead.  Tokens are bitwise identical for every choice — the
+topology-invariance contract (README §Serving) — so these flags are pure
+throughput/capacity knobs.  On CPU, force devices first, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --engine continuous --tp 4
 """
 from __future__ import annotations
 
@@ -55,12 +65,37 @@ def _static(cfg, params, args, key):
     return gen
 
 
+def _mesh_from_args(args):
+    """None (single device), ``--tp N`` → an (N,) "model" mesh, or
+    ``--mesh RxC`` → an (R, C) ("data", "model") mesh."""
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.lower().split("x"))
+        if len(shape) != 2:
+            raise SystemExit(f"--mesh wants RxC (e.g. 2x2), got {args.mesh!r}")
+        names = ("data", "model")
+    elif args.tp > 1:
+        shape, names = (args.tp,), ("model",)
+    else:
+        return None
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise SystemExit(
+            f"mesh {shape} needs {need} devices, have {len(devs)} "
+            f"(on CPU: XLA_FLAGS=--xla_force_host_platform_device_count={need})")
+    return jax.sharding.Mesh(np.array(devs[:need]).reshape(shape), names)
+
+
 def _continuous(cfg, params, args):
     page = 16
+    mesh = _mesh_from_args(args)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices "
+              f"(tokens bitwise identical to single-device)")
     max_seq = -(-(args.prompt_len + args.gen) // page) * page
     eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_seq=max_seq,
                            page_size=page, prefill_chunk=min(32, args.prompt_len),
-                           scfg=SampleConfig(seed=args.seed))
+                           scfg=SampleConfig(seed=args.seed), mesh=mesh)
     rng = np.random.RandomState(args.seed)
     for i in range(args.requests):
         plen = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1)
@@ -90,7 +125,16 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-parallel degree for --engine continuous "
+                         "(tokens are bitwise invariant to this)")
+    ap.add_argument("--mesh", default=None,
+                    help='mesh shape "RxC" as (data, model), e.g. 2x2; '
+                         "overrides --tp")
     args = ap.parse_args(argv)
+
+    if (args.tp > 1 or args.mesh) and args.engine != "continuous":
+        ap.error("--tp/--mesh apply to --engine continuous")
 
     cfg = registry.get(args.arch)
     if args.reduced:

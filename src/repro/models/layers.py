@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import fold
 from repro.dist.sharding import shard
 from repro.kernels.decode import paged_attention
 from repro.kernels.ops import attention as attention_op
@@ -91,12 +92,15 @@ def attn_defs(cfg, cross: bool = False):
 
 
 def _project_qkv(p, xq, xkv, cfg, q_pos, kv_pos, use_rope=True):
-    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hd = cfg.head_dim
     q = dot(xq, p["wq"])
     k = dot(xkv, p["wk"])
     v = dot(xkv, p["wv"])
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # head counts come from the projection widths, not the config: under the
+    # sharded serving step the params arrive column-sliced (h/tp, hk/tp heads)
+    h, hk = q.shape[-1] // hd, k.shape[-1] // hd
     q = q.reshape(xq.shape[:-1] + (h, hd)).astype(cfg.dtype)
     k = k.reshape(xkv.shape[:-1] + (hk, hd)).astype(cfg.dtype)
     v = v.reshape(xkv.shape[:-1] + (hk, hd)).astype(cfg.dtype)
@@ -168,6 +172,45 @@ def _sdpa_decode(q, k_cache, v_cache, valid_len, window=None):
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def _canonical_paged_sdpa(q, k, v, cfg, window=None, segment_ids=None):
+    """Training-side attention computed with the *literal serve kernel*.
+
+    Fresh K/V are laid out as trivially-paged pools (logical page ``j`` of row
+    ``b`` is pool page ``b·n_pg + j``) and reduced by the same fixed-order
+    split-KV walk :func:`repro.kernels.decode.paged_attention` runs in the
+    engine, at the page size carried by the canonical scope
+    (``cfg.canonical_reductions``).  That makes the train forward bitwise
+    equal to ``ContinuousEngine`` chunked prefill at the same ``page_size`` —
+    the train≡serve half of the topology-invariance contract.
+
+    Causality is taken over the **row index** (not the RoPE positions, which
+    restart per document in packed batches): within a document row order and
+    position order coincide, and ``segment_ids`` mask everything across
+    documents — matching the engine, where each request is its own batch row
+    with absolute positions.
+    """
+    b, s, hk, hd = k.shape
+    ps = fold.scope_pages() or 16
+    n_pg = -(-s // ps)
+    pad = n_pg * ps - s
+
+    def pool(t):   # (B, S, Hk, D) -> (B·n_pg, ps, Hk, D); pad rows masked out
+        t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return t.reshape(b * n_pg, ps, hk, hd)
+
+    table = (jnp.arange(b, dtype=jnp.int32)[:, None] * n_pg
+             + jnp.arange(n_pg, dtype=jnp.int32)[None, :])
+    qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    kv_seg = None
+    if segment_ids is not None:
+        kv_seg = jnp.pad(segment_ids.astype(jnp.int32), ((0, 0), (0, pad)),
+                         constant_values=-1).reshape(b * n_pg, ps)
+        segment_ids = segment_ids.astype(jnp.int32)
+    return paged_attention(q, pool(k), pool(v), table, qpos,
+                           window=window or None, q_segments=segment_ids,
+                           kv_segments=kv_seg)
+
+
 def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
                     causal=True, cross_x=None, window=None, paged=None,
                     segment_ids=None):
@@ -184,10 +227,11 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
                      and batched one-token decode.
       window:        optional sliding-window size in tokens (defaults to
                      ``cfg.attn_window``); honored on train/prefill (as a
-                     masks.SlidingWindow spec) AND on cached decode (the
-                     score mask keeps the last ``window`` positions), so
-                     windowed training and generation match. The paged-KV
-                     serving path refuses windows (not plumbed yet).
+                     masks.SlidingWindow spec), on cached decode (the score
+                     mask keeps the last ``window`` positions) AND on the
+                     paged serving path (the page walk masks out-of-window
+                     lanes to exact zeros), so windowed training, generation
+                     and serving all see the same distribution.
       segment_ids:   optional (B, S) packed-document ids (train/prefill);
                      cross-segment attention is masked out.
     Returns (y, new_cache).
@@ -203,27 +247,50 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
         jnp.arange(xkv.shape[1])[None, :])
 
     if paged is not None:
-        assert not window, (
-            "sliding-window attention is not plumbed through the paged-KV "
-            "serving path yet — a window-trained model would silently decode "
-            "against full history; refusing instead")
         k_pages, v_pages = cache
         q, k, v = _project_qkv(p, x, x, cfg, positions, positions, use_rope=True)
         k_flat = k.reshape((-1,) + k.shape[2:]).astype(k_pages.dtype)
         v_flat = v.reshape((-1,) + v.shape[2:]).astype(v_pages.dtype)
-        k_pages = k_pages.at[paged["write_pages"], paged["write_offsets"]].set(k_flat)
-        v_pages = v_pages.at[paged["write_pages"], paged["write_offsets"]].set(v_flat)
-        out = paged_attention(q, k_pages, v_pages, paged["page_table"], positions)
-        out = out.reshape(x.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
-        y = dot(out, p["wo"], out_dtype=x.dtype)
+        # unique_indices: every *live* token owns a distinct (page, offset)
+        # pair by construction of the engine's write targets; duplicates only
+        # ever land on the trash page, whose content is unreachable (the
+        # kernel's position mask multiplies its lanes to exact zeros — proven
+        # by the stale-pool/padding invariance tests), so the order-free
+        # scatter is sound and passes verify.trace's unordered-scatter lint.
+        k_pages = k_pages.at[paged["write_pages"], paged["write_offsets"]].set(
+            k_flat, unique_indices=True)
+        v_pages = v_pages.at[paged["write_pages"], paged["write_offsets"]].set(
+            v_flat, unique_indices=True)
+        # under TP the projections arrive column-sliced: this rank computes
+        # h_loc = H/tp query heads. When the pool keeps more kv heads than
+        # those queries need (kv heads replicated because they don't divide
+        # the mesh axis), select the contiguous kv slice backing them.
+        h_loc = q.shape[-2]
+        g = cfg.n_heads // cfg.n_kv_heads
+        kv_needed = max(1, h_loc // g)
+        kp, vp = k_pages, v_pages
+        if k_pages.shape[-2] != kv_needed:
+            start = (jax.lax.axis_index(fold.scope_axis()) * h_loc) // g
+            kp = jax.lax.dynamic_slice_in_dim(k_pages, start, kv_needed, -2)
+            vp = jax.lax.dynamic_slice_in_dim(v_pages, start, kv_needed, -2)
+        out = paged_attention(q, kp, vp, paged["page_table"], positions,
+                              window=window or None)
+        out = out.reshape(x.shape[:-1] + (h_loc * cfg.head_dim,))
+        # canonical fold (virtual shard = one head): the serve-side wo
+        # reduction is identical at every TP degree including 1
+        y = fold.canonical_row_dot(out, p["wo"], cfg.head_dim, out_dtype=x.dtype)
         return shard(y, "batch", "seq", "act_embed"), (k_pages, v_pages)
 
     if cache is None:
         q, k, v = _project_qkv(p, x, xkv, cfg, positions, kv_positions, use_rope)
-        q = shard(q, "batch", "seq", "act_heads", None)
-        out = _sdpa_full(q, k, v, cfg, causal and cross_x is None,
-                         window=window if cross_x is None else None,
-                         segment_ids=segment_ids if cross_x is None else None)
+        if fold.active() and causal and cross_x is None:
+            out = _canonical_paged_sdpa(q, k, v, cfg, window=window,
+                                        segment_ids=segment_ids)
+        else:
+            q = shard(q, "batch", "seq", "act_heads", None)
+            out = _sdpa_full(q, k, v, cfg, causal and cross_x is None,
+                             window=window if cross_x is None else None,
+                             segment_ids=segment_ids if cross_x is None else None)
         new_cache = None
     else:
         k_cache, v_cache = cache
@@ -241,10 +308,13 @@ def attention_block(p, x, cfg, *, positions=None, cache=None, cache_pos=None,
                                window=window if cross_x is None else None)
         new_cache = (k_cache, v_cache)
 
-    out = out.reshape(x.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
-    # row-parallel product emitted in bf16: the TP partial-sum all-reduce then
-    # moves half the bytes (f32→bf16); MXU still accumulates f32 internally.
-    y = dot(out, p["wo"], out_dtype=x.dtype)
+    out = out.reshape(out.shape[:-2] + (out.shape[-2] * out.shape[-1],))
+    if fold.active():
+        y = fold.canonical_row_dot(out, p["wo"], cfg.head_dim, out_dtype=x.dtype)
+    else:
+        # row-parallel product emitted in bf16: the TP partial-sum all-reduce
+        # then moves half the bytes (f32→bf16); MXU accumulates f32 internally.
+        y = dot(out, p["wo"], out_dtype=x.dtype)
     return shard(y, "batch", "seq", "act_embed"), new_cache
 
 
@@ -271,8 +341,16 @@ def apply_mlp(p, x, cfg):
     else:
         raise ValueError(cfg.activation)
     h = shard(h.astype(x.dtype), "batch", "seq", "act_mlp")
-    return shard(dot(h, p["w_down"], out_dtype=x.dtype),
-                 "batch", "seq", "act_embed")  # bf16 row-parallel all-reduce
+    if fold.active():
+        # canonical virtual grid for the down-projection: V = n_heads (a model
+        # property, never the mesh), so d_ff must split evenly over it
+        width, rem = divmod(cfg.d_ff, cfg.n_heads)
+        assert rem == 0, (
+            "canonical reductions need n_heads | d_ff", cfg.d_ff, cfg.n_heads)
+        y = fold.canonical_row_dot(h, p["w_down"], width, out_dtype=x.dtype)
+    else:
+        y = dot(h, p["w_down"], out_dtype=x.dtype)
+    return shard(y, "batch", "seq", "act_embed")  # bf16 row-parallel all-reduce
 
 
 # ----------------------------------------------------------------- embeddings

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.dist import fold
 from repro.dist.sharding import shard
 from repro.models import layers as L
 from repro.models import mamba as M
@@ -258,7 +259,22 @@ def forward(params, batch, cfg, *, remat=False, remat_policy="none"):
     ``data.pipeline.pack_documents`` format) additionally carry
     ``positions`` (B, S) — RoPE restarts at 0 inside each document — and
     ``segment_ids`` (B, S) — cross-document attention is masked out.
+
+    ``cfg.canonical_reductions = N`` switches the forward into serve-canonical
+    mode (see :mod:`repro.dist.fold`): attention runs the literal paged-KV
+    serve kernel over an N-token page walk and the row-parallel projections
+    use the topology-invariant canonical fold, making these logits bitwise
+    equal to ``ContinuousEngine`` chunked prefill at ``page_size=N``.
     """
+    if cfg.canonical_reductions:
+        with fold.canonical_scope(page_size=cfg.canonical_reductions):
+            return _forward_body(params, batch, cfg, remat=remat,
+                                 remat_policy=remat_policy)
+    return _forward_body(params, batch, cfg, remat=remat,
+                         remat_policy=remat_policy)
+
+
+def _forward_body(params, batch, cfg, *, remat, remat_policy):
     x = _embed_inputs(params, cfg, batch)
     if cfg.pos_embed == "learned":
         x = x + params["pos_embed"][: x.shape[1]].astype(cfg.dtype)
@@ -378,17 +394,24 @@ def paged_step(params, caches, tokens, positions, page_table, write_pages,
     Returns (logits (B, L, V), new caches).  Every op is row-independent and
     the KV reduction order is fixed (repro.kernels.decode), so a row's logits
     are a pure function of its own (params, tokens, positions, page history).
+
+    Always runs under :func:`repro.dist.fold.canonical_scope`: the serve-side
+    row-parallel reductions (wo, w_down) take the canonical fold form at every
+    topology, so the single-device engine and every TP degree agree bitwise
+    (the sharded step builder re-enters the scope with its mesh axis; this
+    local entry is then a no-op — outer wins).
     """
-    x = L.apply_embed(params["embed"], tokens, cfg)
-    if cfg.pos_embed == "learned":
-        x = x + params["pos_embed"][positions].astype(cfg.dtype)
-    paged = dict(page_table=page_table, write_pages=write_pages,
-                 write_offsets=write_offsets)
-    x, new_caches, _ = _apply_stack(params["blocks"], x, cfg,
-                                    positions=positions, caches=caches,
-                                    cache_pos=0, cross_x=None, paged=paged)
-    x = L.apply_norm(params["ln_f"], x, cfg)
-    return _lm_logits(params, x, cfg), new_caches
+    with fold.canonical_scope():
+        x = L.apply_embed(params["embed"], tokens, cfg)
+        if cfg.pos_embed == "learned":
+            x = x + params["pos_embed"][positions].astype(cfg.dtype)
+        paged = dict(page_table=page_table, write_pages=write_pages,
+                     write_offsets=write_offsets)
+        x, new_caches, _ = _apply_stack(params["blocks"], x, cfg,
+                                        positions=positions, caches=caches,
+                                        cache_pos=0, cross_x=None, paged=paged)
+        x = L.apply_norm(params["ln_f"], x, cfg)
+        return _lm_logits(params, x, cfg), new_caches
 
 
 def loss_fn(params, batch, cfg, *, remat=False, remat_policy="none"):

@@ -22,7 +22,11 @@ deterministic serving engine this module is really about:
 Contract (README §Serving, enforced by tests/test_serve_invariance.py): for a
 fixed (params, prompt tokens, seed, sampling config), a request's emitted
 tokens are bitwise identical across co-batch composition, batch size, prompt
-padding, arrival order, and prefill chunk size.
+padding, arrival order, and prefill chunk size — and, with the optional
+``mesh`` argument (TP over a ``"model"`` axis, :mod:`repro.serve.sharded`),
+across tensor-parallel degrees and mesh shapes too: every row-parallel
+reduction takes the canonical virtual-shard fold form
+(:mod:`repro.dist.fold`), so TP=1/2/4 compute the same fold tree bitwise.
 """
 from __future__ import annotations
 
@@ -127,18 +131,27 @@ def _sampler_fn(scfg: SampleConfig):
     """Per-request-keyed row sampler: ``fold_in(fold_in(key(seed), request_id),
     token_index)`` vmapped per row — sampling never sees slot placement or
     co-batch, which is half of the batch-invariance contract (the other half
-    is the fixed-order paged attention reduction)."""
+    is the fixed-order paged attention reduction).
+
+    Returns ``(tokens (B,), logprobs (B,))``: the log-probability of the
+    chosen token under the distribution it was drawn from (post temperature /
+    top-k; raw softmax for greedy) — part of the topology-invariance contract,
+    so the mesh-axis tests can assert sampled logprobs bitwise too."""
     base = jax.random.PRNGKey(scfg.seed)
 
-    def sample(logits, req_ids, steps):          # (B, V), (B,), (B,) -> (B,)
+    def sample(logits, req_ids, steps):          # (B, V), (B,), (B,) -> (B,)²
         logits = logits.astype(jnp.float32)
         if scfg.temperature == 0.0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            lp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                                     tok[:, None], axis=-1)[:, 0]
+            return tok, lp
 
         def one(row, rid, t):
             k = jax.random.fold_in(jax.random.fold_in(base, rid), t)
-            return jax.random.categorical(
-                k, _transform_logits(row, scfg)).astype(jnp.int32)
+            tl = _transform_logits(row, scfg)
+            tok = jax.random.categorical(k, tl).astype(jnp.int32)
+            return tok, jax.nn.log_softmax(tl)[tok]
 
         return jax.vmap(one)(logits, req_ids, steps)
 
@@ -150,6 +163,7 @@ class _Active:
     """Host-side per-slot decode state."""
     req: Request
     produced: List[int]
+    logprobs: List[float] = dataclasses.field(default_factory=list)
     done: bool = False
 
     @property
@@ -164,7 +178,15 @@ class ContinuousEngine:
     def __init__(self, cfg, params, *, n_slots: int = 4, max_seq: int = 128,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: int = 32, scfg: SampleConfig = SampleConfig(),
-                 tracker=None):
+                 tracker=None, mesh=None, capture_prefill_logits: bool = False):
+        """``mesh``: optional :class:`jax.sharding.Mesh` with a ``"model"``
+        axis — the jitted step becomes the TP-sharded shard_map step
+        (:mod:`repro.serve.sharded`); tokens/logprobs are bitwise identical
+        to ``mesh=None`` for every TP degree and mesh shape (the
+        topology-invariance contract, README §Serving).
+        ``capture_prefill_logits``: keep each request's per-position prefill
+        logits in ``self.prefill_logits[req_id]`` (train≡serve parity tests).
+        """
         assert T.supports_paged(cfg), (
             "paged serving covers decoder-only, attention-only LMs")
         assert max_seq % page_size == 0 and prefill_chunk >= 1
@@ -186,10 +208,31 @@ class ContinuousEngine:
         self.sched = FCFSScheduler(n_slots)
         self._slots: Dict[int, _Active] = {}
         self.results: Dict[int, List[int]] = {}
+        self.result_logprobs: Dict[int, np.ndarray] = {}
+        self.prefill_logits: Dict[int, np.ndarray] = {}
+        self._capture = capture_prefill_logits
         self._next_id = 0
         self.decode_steps = 0               # telemetry for tests/benchmarks
 
-        self._step = _paged_step_fn(cfg)
+        self.mesh = mesh
+        if mesh is None:
+            self._step = _paged_step_fn(cfg)
+        else:
+            from repro.serve.sharded import make_sharded_paged_step
+            sharded = make_sharded_paged_step(cfg, mesh, params,
+                                              self.cache.pools)
+            dev = mesh.devices.flat[0]
+
+            def step(*args):
+                logits, pools = sharded(*args)
+                # Gather logits onto one device before the sampler: a
+                # vocab-sharded operand would make log_softmax's sum/max
+                # lower as a cross-device reduction whose combine topology
+                # depends on TP degree (~1-ulp logprob drift at tp>=2).
+                # device_put is pure data movement, so this is bitwise.
+                return jax.device_put(logits, dev), pools
+
+            self._step = step
         self._sampler = _sampler_fn(scfg)
 
     # ------------------------------------------------------------ request API
@@ -263,6 +306,7 @@ class ContinuousEngine:
         prompt = np.asarray(req.tokens, np.int32)
         table = self.cache.device_page_table([slot])     # fixed for the prefill
         logits = None
+        rows = []
         for start in range(0, plen, C):
             pos = np.arange(start, start + C, dtype=np.int32)
             valid = pos < plen
@@ -272,10 +316,15 @@ class ContinuousEngine:
                 self.params, self.cache.pools,
                 jnp.asarray(toks)[None], jnp.asarray(pos)[None], table,
                 jnp.asarray(wp), jnp.asarray(wo))
-        first = self._sampler(logits[:, (plen - 1) % C],
-                              jnp.asarray([req.id], jnp.int32),
-                              jnp.asarray([0], jnp.int32))
-        self._slots[slot] = st = _Active(req, [int(first[0])])
+            if self._capture:            # valid rows only, raw dtype (bitwise)
+                rows.append(np.asarray(logits[0, : min(C, plen - start)]))
+        if self._capture:
+            self.prefill_logits[req.id] = np.concatenate(rows, axis=0)
+        first, first_lp = self._sampler(logits[:, (plen - 1) % C],
+                                        jnp.asarray([req.id], jnp.int32),
+                                        jnp.asarray([0], jnp.int32))
+        self._slots[slot] = st = _Active(req, [int(first[0])],
+                                         [float(first_lp[0])])
         self.tracker.log("serve_prefill", {
             "request_id": req.id, "slot": slot, "prompt_len": plen,
             "chunks": -(-plen // C)})
@@ -315,11 +364,13 @@ class ContinuousEngine:
                 jnp.asarray(pos), self.cache.device_page_table(),
                 jnp.asarray(wp), jnp.asarray(wo))
             self.decode_steps += 1
-            nxt = np.asarray(self._sampler(logits[:, 0], jnp.asarray(rids),
-                                           jnp.asarray(steps)))
+            nxt, lps = self._sampler(logits[:, 0], jnp.asarray(rids),
+                                     jnp.asarray(steps))
+            nxt, lps = np.asarray(nxt), np.asarray(lps)
             for s in live:
                 st = self._slots[s]
                 st.produced.append(int(nxt[s]))
+                st.logprobs.append(float(lps[s]))
                 self._finish_check(st)
             self.tracker.log("serve_decode", {"live_slots": len(live)},
                              step=self.decode_steps)
@@ -327,6 +378,8 @@ class ContinuousEngine:
         for s in [s for s, st in self._slots.items() if st.done]:
             st = self._slots.pop(s)
             self.results[st.req.id] = st.produced
+            self.result_logprobs[st.req.id] = np.asarray(st.logprobs,
+                                                         np.float32)
             self.cache.free_slot(s)
             self.sched.release(s)
             self.tracker.log("serve_done", {

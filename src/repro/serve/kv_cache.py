@@ -19,7 +19,11 @@ Determinism rules (README §Serving):
 
 Host state is numpy; the device pools are a pytree shaped by
 ``transformer.init_paged_cache`` and threaded functionally through the jitted
-serving steps.
+serving steps.  Under a TP mesh the pools shard on their kv-head axis when
+the degree divides ``n_kv_heads`` (and are replicated otherwise, each rank
+dynamic-slicing its group's kv span) — see ``serve/sharded.py``; the host
+machinery here is identical either way, because page ids and offsets are
+head-independent.
 """
 from __future__ import annotations
 

@@ -19,6 +19,12 @@ None of this affects *tokens* — per-request output invariance is carried by
 the kernel path (row-independent math, fixed page reduction order); the
 scheduler's determinism makes the *schedule itself* reproducible, which is
 what makes performance traces and failure replays meaningful.
+
+The scheduler is also **topology-agnostic**: it runs on the host against
+full (replicated) logits and page tables, so the same schedule drives the
+single-device engine and every TP/mesh-sharded engine
+(``serve/sharded.py``) — one more reason tokens can be bitwise invariant to
+the mesh (README §Serving, topology-invariance contract).
 """
 from __future__ import annotations
 

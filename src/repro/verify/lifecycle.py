@@ -230,13 +230,82 @@ MATRIX: Dict[str, LifecycleConfig] = {
     "gqa":     LifecycleConfig(overrides=(("n_kv_heads", 2),)),
     "moe":     LifecycleConfig(arch="phi3.5-moe-42b-a6.6b"),
     "bf16opt": LifecycleConfig(opt_state_dtype="bfloat16"),
+    # sentinel cell: not a train-lifecycle chain — run_cell dispatches it to
+    # run_train_serve_parity (train forward ≡ serve chunked prefill, bitwise)
+    "train_serve_parity": LifecycleConfig(steps=0),
 }
+
+PARITY_ARCHS = ("stablelm-1.6b", "qwen1.5-110b", "mistral-nemo-12b")
+_PARITY_PAGE = 8
+
+
+def run_train_serve_parity(archs=PARITY_ARCHS,
+                           page_size: int = _PARITY_PAGE) -> Dict:
+    """Train≡serve logits parity as a conformance cell.
+
+    For each (reduced) registry arch: run the training-side ``forward`` in
+    serve-canonical mode (``canonical_reductions=page_size``, see
+    :mod:`repro.dist.fold`) over a fixed prompt set, and the paged
+    ``ContinuousEngine`` with ``capture_prefill_logits`` over the same
+    prompts (chunked prefill at the same page size).  The two per-prompt
+    logit stacks are digested with :func:`repro.verify.digest.leaf_digest`;
+    the cell is conformant iff every arch's train/serve digests match —
+    i.e. prefill serving *is* the training forward, bit for bit.
+    """
+    from repro.models import transformer as T
+    from repro.serve.engine import ContinuousEngine
+    from repro.verify.digest import combine_leaf_digests, leaf_digest
+
+    prompt_lens = (5, 13, 32, 7)
+    heads: Dict[str, str] = {}
+    records: Dict[str, Dict[str, str]] = {}
+    for arch in archs:
+        cfg = registry.get(arch).reduced()
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(1, cfg.vocab, size=n).tolist()
+                   for n in prompt_lens]
+        eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                               page_size=page_size, prefill_chunk=16,
+                               capture_prefill_logits=True)
+        for i, p in enumerate(prompts):
+            eng.submit(p, req_id=i, max_new_tokens=1)
+        eng.run()
+        pcfg = cfg.replace(canonical_reductions=page_size)
+        fwd = jax.jit(lambda pr, b, _c=pcfg: T.forward(pr, b, _c)[0])
+        train_d, serve_d = {}, {}
+        for i, p in enumerate(prompts):
+            toks = jnp.asarray(np.asarray(p, np.int32)[None])
+            logits = np.asarray(fwd(params, {"tokens": toks}))[0][: len(p)]
+            train_d[f"req{i}"] = leaf_digest(logits.astype(np.float32))
+            serve_d[f"req{i}"] = leaf_digest(
+                eng.prefill_logits[i].astype(np.float32))
+        heads[f"{arch}/train"] = combine_leaf_digests(train_d)
+        heads[f"{arch}/serve"] = combine_leaf_digests(serve_d)
+        records[arch] = {"train": train_d, "serve": serve_d}
+    conformant = all(heads[f"{a}/train"] == heads[f"{a}/serve"]
+                     for a in archs)
+    return {
+        "cell": "train_serve_parity",
+        "config": {"archs": list(archs), "page_size": page_size,
+                   "prompt_lens": list(prompt_lens)},
+        "heads": heads,
+        "records": records,
+        "conformant": conformant,
+        "first_divergence": {} if conformant else {
+            a: [r for r in records[a]["train"]
+                if records[a]["train"][r] != records[a]["serve"][r]]
+            for a in archs
+            if heads[f"{a}/train"] != heads[f"{a}/serve"]},
+    }
 
 
 def run_cell(name: str, *, crash_at: int = 2,
              scenarios=("straight", "resume", "elastic")) -> Dict:
     """Run one matrix cell through the requested scenarios; returns a report
     dict with chain records and a ``conformant`` verdict."""
+    if name == "train_serve_parity":
+        return run_train_serve_parity()
     lc = MATRIX[name]
     chains: Dict[str, DigestChain] = {}
     if "straight" in scenarios:

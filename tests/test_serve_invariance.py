@@ -1,4 +1,4 @@
-"""Batch-invariance suite for the continuous-batching serving engine.
+"""Batch- and topology-invariance suite for the continuous-batching engine.
 
 The contract (README §Serving): for a fixed (params, prompt tokens, seed,
 sampling config), a request's emitted tokens are **bitwise identical**
@@ -9,10 +9,22 @@ regardless of
   * how other prompts pad the (virtual) batch,
   * the order requests were submitted in,
   * the prefill chunk size,
-  * pool fragmentation / page reuse from earlier evictions.
+  * pool fragmentation / page reuse from earlier evictions,
+  * — and (the mesh axis, bottom of this file) the tensor-parallel degree
+    and mesh shape the engine is sharded over: TP ∈ {1, 2, 4} and (4,) vs
+    (2, 2) vs (1, 4) meshes all emit the same tokens *and* the same sampled
+    logprobs as the plain single-device engine.
 
 Every assertion below is ``assert_array_equal`` — no tolerances anywhere.
+The mesh-axis tests run in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so this process keeps
+its single default device.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 import jax
@@ -22,6 +34,7 @@ from repro.models import transformer as T
 from repro.serve.engine import ContinuousEngine, SampleConfig
 
 GEN = 8
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.fixture(scope="module")
@@ -147,3 +160,201 @@ def test_streamed_arrivals_invariant(setup):
     eng.submit(prompts[2], req_id=2, max_new_tokens=GEN)
     eng.submit(prompts[3], req_id=3, max_new_tokens=GEN)
     assert_same(base, eng.run(), [0, 1, 2, 3])
+
+
+# --------------------------------------------------------------- mesh axis
+# One subprocess (forced 4 host devices) exercises every topology; each
+# pytest test below asserts its own marker so failures stay attributable.
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serve.engine import ContinuousEngine, SampleConfig
+    from repro.serve.sharded import make_sharded_paged_step, validate_tp
+    from repro.verify import trace
+
+    devs = np.array(jax.devices())
+    assert len(devs) == 4, devs
+
+    def mk(shape, names):
+        return jax.sharding.Mesh(devs[: int(np.prod(shape))].reshape(shape),
+                                 names)
+
+    MESHES = {
+        "tp1": mk((1,), ("model",)),
+        "tp2": mk((2,), ("model",)),
+        "tp4": mk((4,), ("model",)),
+        "mesh2x2": mk((2, 2), ("data", "model")),
+        "mesh1x4": mk((1, 4), ("data", "model")),
+    }
+
+    rng = np.random.RandomState(0)
+
+    def run(cfg, params, prompts, mesh, scfg=SampleConfig()):
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                               page_size=8, prefill_chunk=16, mesh=mesh,
+                               scfg=scfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, req_id=i, max_new_tokens=8)
+        return eng.run(), eng.result_logprobs
+
+    def same(a, b):
+        return (set(a[0]) == set(b[0])
+                and all(np.array_equal(a[0][r], b[0][r]) for r in a[0])
+                and all(np.array_equal(a[1][r], b[1][r]) for r in a[1]))
+
+    cfg = registry.get("stablelm-1.6b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    prompts = [rng.randint(1, cfg.vocab, size=n).tolist()
+               for n in (5, 13, 32, 7, 21, 9, 17, 3)]
+    base = run(cfg, params, prompts, None)
+    for name, mesh in MESHES.items():
+        assert same(base, run(cfg, params, prompts, mesh)), name
+        print(f"greedy {name} bitwise OK")
+
+    scfg = SampleConfig(temperature=0.8, top_k=40, seed=7)
+    sbase = run(cfg, params, prompts, None, scfg)
+    for name in ("tp2", "tp4", "mesh2x2"):
+        assert same(sbase, run(cfg, params, prompts, MESHES[name], scfg)), name
+        print(f"sampled {name} bitwise OK")
+
+    # GQA under TP: kv heads sharded (tp | n_kv_heads) AND the replicated-pool
+    # fallback (tp=4 over 2 kv heads -> every rank holds the full pool and
+    # dynamic-slices its group's kv span)
+    for kv, arch in ((2, "stablelm-1.6b"), (1, "qwen1.5-110b")):
+        gcfg = registry.get(arch).reduced(n_kv_heads=kv)
+        assert gcfg.n_kv_heads == kv
+        gparams = T.init(gcfg, jax.random.PRNGKey(1))
+        gbase = run(gcfg, gparams, prompts[:4], None)
+        for tp in (2, 4):
+            mesh = mk((tp,), ("model",))
+            assert same(gbase, run(gcfg, gparams, prompts[:4], mesh)), (kv, tp)
+            print(f"gqa kv={kv} tp{tp} bitwise OK")
+
+    # windowed attention on the paged path, sharded == single-device
+    wcfg = cfg.replace(attn_window=8)
+    wparams = T.init(wcfg, jax.random.PRNGKey(2))
+    wbase = run(wcfg, wparams, prompts[:4], None)
+    assert same(wbase, run(wcfg, wparams, prompts[:4], MESHES["tp2"]))
+    print("windowed tp2 bitwise OK")
+
+    # the sharded decode step must lower with zero flagged primitives: the
+    # canonical fold's ppermute ring + one-hot psum broadcast is the only
+    # collective pattern and verify.trace structurally blesses it
+    pools = T.init_paged_cache(cfg, 9, 8)
+    step = make_sharded_paged_step(cfg, MESHES["tp2"], params, pools)
+    toks = np.zeros((1, 1), np.int32)
+    pos = np.zeros((1, 1), np.int32)
+    table = np.full((1, 8), 8, np.int32)
+    wp = np.full((1,), 8, np.int32)
+    wo = np.zeros((1,), np.int32)
+    findings = trace.audit_fn(step, params, pools, toks, pos, table, wp, wo)
+    assert findings == [], findings
+    print("sharded step trace audit clean")
+
+    # loud preconditions
+    try:
+        validate_tp(cfg, 3)
+        raise SystemExit("validate_tp(tp=3) should have raised")
+    except ValueError:
+        print("validate_tp rejects tp=3")
+""")
+
+SOAK_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serve.engine import ContinuousEngine, SampleConfig
+
+    cfg = registry.get("stablelm-1.6b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, size=n).tolist()
+               for n in (5, 13, 32, 7)]
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("model",))
+
+    def run(mesh, scfg):
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                               page_size=8, prefill_chunk=16, mesh=mesh,
+                               scfg=scfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, req_id=i, max_new_tokens=8)
+        return eng.run(), eng.result_logprobs
+
+    for scfg in (SampleConfig(),
+                 SampleConfig(temperature=0.7, top_k=50, seed=3)):
+        base = run(None, scfg)
+        for rep in range(20):
+            got = run(mesh, scfg)
+            assert all(np.array_equal(base[0][r], got[0][r]) for r in base[0])
+            assert all(np.array_equal(base[1][r], got[1][r]) for r in base[1])
+    print("20-rep sharded soak bitwise OK")
+""")
+
+
+def _run_sub(script):
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900,
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=REPO_ROOT)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def sharded_out():
+    return _run_sub(SHARDED_SCRIPT)
+
+
+def test_tokens_invariant_to_tp_degree(sharded_out):
+    """TP 1/2/4 engines emit the single-device tokens + logprobs bitwise."""
+    for name in ("tp1", "tp2", "tp4"):
+        assert f"greedy {name} bitwise OK" in sharded_out
+
+
+def test_tokens_invariant_to_mesh_shape(sharded_out):
+    """(2,2) and (1,4) meshes (extra data axis) match the (4,) mesh's and
+    the single-device engine's stream bitwise."""
+    assert "greedy mesh2x2 bitwise OK" in sharded_out
+    assert "greedy mesh1x4 bitwise OK" in sharded_out
+
+
+def test_sampled_logprobs_invariant_to_topology(sharded_out):
+    """Temperature sampling: tokens AND chosen-token logprobs bitwise across
+    TP degrees and mesh shapes."""
+    for name in ("tp2", "tp4", "mesh2x2"):
+        assert f"sampled {name} bitwise OK" in sharded_out
+
+
+def test_gqa_under_tp(sharded_out):
+    """Grouped-query configs: sharded kv pools when tp | n_kv_heads, the
+    replicated-pool dynamic-slice fallback otherwise — both bitwise."""
+    for kv in (2, 1):
+        for tp in (2, 4):
+            assert f"gqa kv={kv} tp{tp} bitwise OK" in sharded_out
+
+
+def test_windowed_serve_sharded(sharded_out):
+    """Sliding-window attention on the paged path survives sharding."""
+    assert "windowed tp2 bitwise OK" in sharded_out
+
+
+def test_sharded_step_trace_audit_clean(sharded_out):
+    """verify.trace flags nothing in the TP-sharded decode step's jaxpr."""
+    assert "sharded step trace audit clean" in sharded_out
+
+
+def test_validate_tp_loud(sharded_out):
+    assert "validate_tp rejects tp=3" in sharded_out
+
+
+@pytest.mark.slow
+def test_sharded_run_to_run_soak():
+    """20 fresh sharded engines (greedy and sampled) replay the single-device
+    stream bitwise every time."""
+    out = _run_sub(SOAK_SCRIPT)
+    assert "20-rep sharded soak bitwise OK" in out
