@@ -14,7 +14,15 @@ sharded over an n-way model mesh for every n ≤ len(jax.devices()) in
 single-device run (the topology-invariance contract) — on a plain 1-CPU CI
 host only tp1 runs; the sharded-serve CI job forces 4 host devices to cover
 the full axis.
+
+``--preempt-rate`` adds the robustness axis
+(``continuous_preempt{pct}_decode_tps``): deterministic slot-revocation
+faults every ``1/rate`` engine steps force preempt + recompute-restore
+cycles; tokens are asserted bitwise against the fault-free run (the
+determinism-under-faults contract, README §Robustness), and the recorded
+degradation ratio is the price of a preemption at that rate.
 """
+import argparse
 import json
 import os
 import time
@@ -38,7 +46,18 @@ def _row(name, us, derived):
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preempt-rate", type=float, nargs="*", default=None,
+                    metavar="RATE",
+                    help="also bench under revoke_slot faults at these rates "
+                         "(faults per engine step, e.g. 0.05 0.15); no value "
+                         "= default axis [0.05, 0.15]")
+    args = ap.parse_args(argv)
+    preempt_rates = args.preempt_rate
+    if preempt_rates is not None and not preempt_rates:
+        preempt_rates = [0.05, 0.15]
+
     cfg = registry.get("stablelm-1.6b").reduced()
     params = T.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(0)
@@ -67,10 +86,10 @@ def main() -> None:
     prompts = [rng.randint(1, cfg.vocab, size=PROMPT).tolist()
                for _ in range(N_REQ)]
 
-    def build(mesh=None):
+    def build(mesh=None, faults=None):
         eng = ContinuousEngine(cfg, params, n_slots=SLOTS,
                                max_seq=PROMPT + GEN + 16, page_size=16,
-                               prefill_chunk=PROMPT, mesh=mesh)
+                               prefill_chunk=PROMPT, mesh=mesh, faults=faults)
         for i in range(N_REQ):
             eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
         return eng
@@ -109,6 +128,36 @@ def main() -> None:
         results["cases"][f"continuous_tp{n}_decode_tps"] = tp_tps
         _row(f"serve_continuous_tp{n}", dt * 1e6 / max(1, GEN * N_REQ),
              f"{tp_tps:.0f}tok/s,bitwise")
+
+    # ---- preemption axis: throughput vs deterministic revoke_slot rate -----
+    if preempt_rates:
+        from repro.faults import Fault, FaultPlan, Injector
+        results["preempt_rates"] = preempt_rates
+        for rate in preempt_rates:
+            period = max(1, int(round(1.0 / rate)))
+            # literal (non-seeded) plan: one victim eviction every `period`
+            # engine steps across a horizon comfortably past the drain point
+            plan = FaultPlan(name=f"bench-preempt-{rate}", faults=tuple(
+                Fault(s, "revoke_slot", arg=1)
+                for s in range(period, 20 * (GEN + 4), period)))
+            build(faults=Injector(plan)).run()          # compile/warm
+            eng = build(faults=Injector(plan))
+            t0 = time.perf_counter()
+            out_p = eng.run()
+            dt = time.perf_counter() - t0
+            for r, v in out_p.items():
+                assert v.tolist() == base_tokens[r], (
+                    f"preempt-rate {rate} tokens diverged on request {r}")
+            p_tps = sum(len(v) for v in out_p.values()) / dt
+            pct = int(round(rate * 100))
+            results["cases"][f"continuous_preempt{pct}_decode_tps"] = p_tps
+            results["cases"][f"continuous_preempt{pct}_vs_clean"] = p_tps / tps
+            results["cases"][f"continuous_preempt{pct}_preemptions"] = (
+                eng.preemptions)
+            _row(f"serve_continuous_preempt{pct}",
+                 dt * 1e6 / max(1, GEN * N_REQ),
+                 f"{p_tps:.0f}tok/s,{eng.preemptions}preempts,"
+                 f"{p_tps / tps:.2f}x,bitwise")
 
     with open(ART, "w") as f:
         json.dump(results, f, indent=1)

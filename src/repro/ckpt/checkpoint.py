@@ -45,6 +45,21 @@ FORMAT_VERSION = 2
 # pin before FAILING the save (it never breaks the reader)
 _PUBLISH_PIN_TIMEOUT = 60.0
 
+# Bounded deterministic retry for *transient* write IO errors (OSError only:
+# ENOSPC that clears, a flaky network mount, an injected repro.faults IO
+# error).  The schedule is fixed — IO_RETRIES extra attempts with backoff
+# RETRY_BACKOFF_S * attempt_number, no jitter — so a retried save behaves
+# identically on every run.  Anything that is not an OSError (a bug, a
+# keyboard interrupt, a monkeypatched crash in tests) fails immediately.
+IO_RETRIES = 2
+RETRY_BACKOFF_S = 0.01
+
+# Fault-injection hook (repro.faults.armed_checkpoint): when set, called as
+# ``_IO_HOOK(step=step, attempt=attempt)`` at the top of every write attempt;
+# it may raise OSError to simulate transient IO failure.  None (the default)
+# is the production path — no call, zero overhead, bitwise-unchanged saves.
+_IO_HOOK = None
+
 # (directory, step) → reader count for restores in flight — _gc and same-step
 # overwrites must not delete these out from under them. A count (not a set)
 # so overlapping readers of the same step each hold their own pin.
@@ -109,11 +124,29 @@ def save(directory: str, step: int, tree, *, async_: bool = False,
         }
         tmp = os.path.join(directory, f".tmp_step_{step}")
         final = os.path.join(directory, f"step_{step}")
+        # ---- write phase, with bounded deterministic retry (OSError only).
+        # Each failed attempt removes its torn tmp dir before retrying; when
+        # the fixed schedule is exhausted the *original* error propagates and
+        # the durable latest checkpoint is untouched (nothing was published).
+        for attempt in range(1 + IO_RETRIES):
+            try:
+                hook = _IO_HOOK
+                if hook is not None:
+                    hook(step=step, attempt=attempt)
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)              # manifest last
+                break
+            except OSError:
+                shutil.rmtree(tmp, ignore_errors=True)
+                if attempt == IO_RETRIES:
+                    raise
+                time.sleep(RETRY_BACKOFF_S * (attempt + 1))
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)  # non-IO: no retry
+                raise
         try:
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **stored)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)                  # manifest last
             # publish under the read guard: a same-step overwrite must not
             # delete the directory out from under a concurrent restore — wait
             # for its pin. If a reader wedges past the timeout the SAVE fails

@@ -1,0 +1,22 @@
+"""Deterministic fault injection (chaos) + the determinism-under-faults story.
+
+README §Robustness: the same request must yield the same bits *under real
+operating conditions* — pool exhaustion, slot revocation, decode stalls,
+engine crashes, flaky checkpoint IO.  This package supplies the faults; the
+hardened layers (``serve/engine.py`` preemption + snapshot/restore,
+``ckpt/checkpoint.py`` bounded retry) supply the survival.
+
+  plan.py         hashable, content-addressed :class:`FaultPlan`s — the
+                  (step, site) schedule of injections, seeded or literal
+  inject.py       :class:`Injector` (the armed plan + landing record),
+                  :func:`armed_checkpoint`, and the typed fault exceptions
+  conformance.py  the chaos conformance matrix: seeded plans × configs, every
+                  completed request bitwise vs fault-free; CLI emits
+                  ``chaos_conformance.json`` (the CI artifact)
+"""
+from repro.faults.inject import (EngineCrash, FaultError, InjectedIOError,
+                                 Injector, armed_checkpoint)
+from repro.faults.plan import KINDS, Fault, FaultPlan
+
+__all__ = ["Fault", "FaultPlan", "KINDS", "Injector", "EngineCrash",
+           "FaultError", "InjectedIOError", "armed_checkpoint"]

@@ -1,0 +1,363 @@
+"""Chaos conformance: every completed request bitwise-equal under faults.
+
+The matrix drives seeded :class:`FaultPlan`s and literal worst-case plans
+against the continuous-batching engine and the checkpoint writer, and checks
+the README §Robustness contract cell by cell:
+
+  unarmed_noop          faults=None vs an armed *empty* plan: bitwise no-op —
+                        the robustness layer at rest changes nothing
+  pool_exhaustion       page quarantines force deterministic preemption;
+                        completed tokens bitwise vs fault-free
+  slot_revocation       repeated victim eviction + recompute-restore
+  decode_stall          stalls delay wall clock, never change a token
+  deadlines             step-deadline cancellations: the *cancelled set* is
+                        identical across runs, survivors bitwise
+  load_shedding         bounded admission: the shed set is a pure function of
+                        the request stream; admitted requests bitwise
+  engine_crash_restore  mid-run crash → snapshot restore → every stream
+                        finishes bitwise (plus the no-snapshot-yet fallback)
+  ckpt_io_retry         transient IO errors absorbed by the bounded retry;
+                        restored tree digest-identical
+  seeded_mix_*          RandomState-scheduled mixes of all serve faults
+
+Each cell records the plan's content-addressed key, the injector's landing
+record digest (*where the faults landed*), and per-request token sha256s —
+the ``chaos_conformance.json`` artifact CI uploads.  Run directly:
+
+    python -m repro.faults.conformance --out chaos_conformance.json
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+ARCH = "stablelm-1.6b"
+GEN = 8
+PROMPT_LENS = [5, 13, 32, 7, 21, 9, 17, 3]
+ENGINE_KW = dict(n_slots=4, max_seq=64, page_size=8, prefill_chunk=16)
+
+
+def _ctx():
+    """(cfg, params, prompts) for the reduced conformance model."""
+    import jax
+    from repro.configs import registry
+    from repro.models import transformer as T
+    cfg = registry.get(ARCH).reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = {i: rng.randint(1, cfg.vocab, size=n).tolist()
+               for i, n in enumerate(PROMPT_LENS)}
+    return cfg, params, prompts
+
+
+def _scfg(sampled: bool):
+    from repro.serve import SampleConfig
+    return (SampleConfig(temperature=0.7, seed=11) if sampled
+            else SampleConfig())
+
+
+def _engine(ctx, scfg, **kw):
+    from repro.serve import ContinuousEngine
+    cfg, params, _ = ctx
+    return ContinuousEngine(cfg, params, scfg=scfg, **ENGINE_KW, **kw)
+
+
+def _submit_all(eng, ctx, ids=None, **kw):
+    _, _, prompts = ctx
+    for i in (ids if ids is not None else sorted(prompts)):
+        eng.submit(prompts[i], req_id=i, max_new_tokens=GEN, **kw)
+
+
+def _tok_sha(results: Dict[int, np.ndarray]) -> Dict[str, str]:
+    return {str(r): hashlib.sha256(
+        np.asarray(t, np.int32).tobytes()).hexdigest()[:16]
+        for r, t in sorted(results.items())}
+
+
+def _bitwise(base, got, ids) -> List[str]:
+    """Mismatching request ids (empty = conformant)."""
+    bad = []
+    for i in ids:
+        if i not in got or not np.array_equal(
+                np.asarray(base[i]), np.asarray(got[i])):
+            bad.append(str(i))
+    return bad
+
+
+def _drained(eng) -> bool:
+    """Zero-leak invariant: pool fully free, no quarantine, scheduler idle."""
+    return (eng.cache.free_pages == eng.cache.layout.n_pages
+            and not eng._quarantine and eng.sched.idle)
+
+
+def _cell(name, plan, inj, ok, results, detail):
+    return {"cell": name, "ok": bool(ok),
+            "plan": plan.key() if plan is not None else None,
+            "n_faults": len(plan) if plan is not None else 0,
+            "faults_landed": len(inj.history) if inj is not None else 0,
+            "history_digest": inj.history_digest() if inj is not None else None,
+            "tokens_sha256": _tok_sha(results), "detail": detail}
+
+
+# --------------------------------------------------------------------- cells
+def cell_unarmed_noop(ctx, base, sampled):
+    """faults=None vs armed empty plan vs no robustness kwargs: all bitwise."""
+    from repro.faults import FaultPlan, Injector
+    plan = FaultPlan(name="empty")
+    inj = Injector(plan)
+    eng = _engine(ctx, _scfg(sampled), faults=inj)
+    _submit_all(eng, ctx)
+    got = eng.run()
+    bad = _bitwise(base, got, sorted(base))
+    ok = not bad and not inj.history and _drained(eng)
+    return _cell("unarmed_noop", plan, inj, ok, got,
+                 {"mismatched": bad, "landed": len(inj.history)})
+
+
+def _serve_fault_cell(ctx, base, sampled, name, plan):
+    from repro.faults import Injector
+    inj = Injector(plan)
+    eng = _engine(ctx, _scfg(sampled), faults=inj)
+    _submit_all(eng, ctx)
+    got = eng.run()
+    bad = _bitwise(base, got, sorted(base))
+    ok = not bad and _drained(eng)
+    return _cell(name, plan, inj, ok, got,
+                 {"mismatched": bad, "preemptions": eng.preemptions,
+                  "decode_steps": eng.decode_steps})
+
+
+def cell_pool_exhaustion(ctx, base, sampled):
+    from repro.faults import Fault, FaultPlan
+    plan = FaultPlan(name="pool-squeeze", faults=(
+        Fault(2, "pool_exhaust", arg=24, duration=3),
+        Fault(6, "pool_exhaust", arg=16, duration=2),
+        Fault(11, "pool_exhaust", arg=28, duration=4)))
+    return _serve_fault_cell(ctx, base, sampled, "pool_exhaustion", plan)
+
+
+def cell_slot_revocation(ctx, base, sampled):
+    from repro.faults import Fault, FaultPlan
+    plan = FaultPlan(name="revoke-storm", faults=(
+        Fault(1, "revoke_slot", arg=2), Fault(4, "revoke_slot", arg=1),
+        Fault(7, "revoke_slot", arg=3), Fault(12, "revoke_slot", arg=1)))
+    return _serve_fault_cell(ctx, base, sampled, "slot_revocation", plan)
+
+
+def cell_decode_stall(ctx, base, sampled):
+    from repro.faults import Fault, FaultPlan
+    plan = FaultPlan(name="stalls", faults=(
+        Fault(3, "decode_stall", arg=3), Fault(9, "decode_stall", arg=2)))
+    return _serve_fault_cell(ctx, base, sampled, "decode_stall", plan)
+
+
+def cell_deadlines(ctx, base, sampled):
+    """Two identical runs under stalls + deadlines: the cancelled sets match
+    exactly, the survivors are bitwise vs the fault-free baseline."""
+    from repro.faults import Fault, FaultPlan, Injector
+    plan = FaultPlan(name="stall-vs-deadline",
+                     faults=(Fault(2, "decode_stall", arg=6),))
+    runs = []
+    for _ in range(2):
+        inj = Injector(plan)
+        eng = _engine(ctx, _scfg(sampled), faults=inj)
+        for i in sorted(base):
+            eng.submit(ctx[2][i], req_id=i, max_new_tokens=GEN,
+                       deadline_steps=6 if i >= 6 else None)
+        runs.append((eng.run(), sorted(eng.cancelled), eng, inj))
+    (got, cancelled, eng, inj), (got2, cancelled2, _, _) = runs
+    survivors = [i for i in sorted(base) if i not in cancelled]
+    bad = _bitwise(base, got, survivors)
+    ok = (not bad and cancelled == cancelled2 and _drained(eng)
+          and sorted(got) == sorted(got2)
+          and not _bitwise(got, got2, sorted(got)))
+    return _cell("deadlines", plan, inj, ok, got,
+                 {"mismatched": bad, "cancelled": list(map(str, cancelled)),
+                  "replay_cancelled_match": cancelled == cancelled2})
+
+
+def cell_load_shedding(ctx, base, sampled):
+    """Bounded queue: the shed set replays identically; admitted bitwise."""
+    from repro.serve import QueueFull
+    shed_sets, results = [], []
+    for _ in range(2):
+        eng = _engine(ctx, _scfg(sampled), max_queue_depth=4)
+        shed = []
+        for i in sorted(base):
+            try:
+                eng.submit(ctx[2][i], req_id=i, max_new_tokens=GEN)
+            except QueueFull:
+                shed.append(i)
+        shed_sets.append(shed)
+        results.append(eng.run())
+    got = results[0]
+    admitted = sorted(got)
+    bad = _bitwise(base, got, admitted)
+    ok = (not bad and shed_sets[0] == shed_sets[1]
+          and sorted(results[1]) == admitted
+          and not _bitwise(got, results[1], admitted)
+          and len(shed_sets[0]) + len(admitted) == len(base))
+    return _cell("load_shedding", None, None, ok, got,
+                 {"mismatched": bad, "shed": list(map(str, shed_sets[0]))})
+
+
+def cell_engine_crash_restore(ctx, base, sampled):
+    """Crash mid-run → restore from the latest snapshot → bitwise finish.
+    Also exercises the crash-before-first-snapshot fallback (fresh engine,
+    full resubmit — still bitwise, because replay is deterministic)."""
+    import os
+    from repro.faults import EngineCrash, Fault, FaultPlan, Injector
+    from repro.serve import ContinuousEngine
+    cfg, params, _ = ctx
+    records = {}
+    for crash_at, snap_every, tag in ((7, 3, "restored"), (1, 50, "fallback")):
+        plan = FaultPlan(name=f"crash@{crash_at}", faults=(
+            Fault(crash_at, "crash"), Fault(4, "revoke_slot", arg=1)))
+        inj = Injector(plan)
+        with tempfile.TemporaryDirectory() as d:
+            eng = _engine(ctx, _scfg(sampled), faults=inj,
+                          snapshot_dir=d, snapshot_every=snap_every)
+            _submit_all(eng, ctx)
+            crashes = restored = 0
+            while True:
+                try:
+                    got = eng.run()
+                    break
+                except EngineCrash:
+                    crashes += 1
+                    if os.listdir(d):
+                        eng = ContinuousEngine.from_snapshot(
+                            d, cfg, params, faults=inj)
+                        restored += 1
+                    else:               # crashed before any snapshot landed
+                        eng = _engine(ctx, _scfg(sampled), faults=inj)
+                        _submit_all(eng, ctx)
+        bad = _bitwise(base, got, sorted(base))
+        records[tag] = dict(bad=bad, crashes=crashes, restored=restored,
+                            drained=_drained(eng), got=got, plan=plan, inj=inj)
+    r = records["restored"]
+    ok = (not r["bad"] and r["crashes"] == 1 and r["restored"] == 1
+          and r["drained"] and not records["fallback"]["bad"]
+          and records["fallback"]["crashes"] == 1
+          and records["fallback"]["restored"] == 0)
+    return _cell("engine_crash_restore", r["plan"], r["inj"], ok, r["got"],
+                 {"restored": {k: v for k, v in r.items()
+                               if k in ("bad", "crashes", "restored")},
+                  "fallback": {k: records["fallback"][k]
+                               for k in ("bad", "crashes", "restored")}})
+
+
+def cell_ckpt_io_retry(ctx, base, sampled):
+    """Transient injected IO errors vs the bounded retry: the save lands,
+    restores digest-identical, and no torn tmp dir survives."""
+    import os
+    import jax
+    from repro.ckpt import checkpoint as C
+    from repro.faults import (Fault, FaultPlan, InjectedIOError, Injector,
+                              armed_checkpoint)
+    from repro.verify import digest as D
+    cfg, params, _ = ctx
+    want = D.tree_digest(params)
+    plan = FaultPlan(name="flaky-io", faults=(
+        Fault(10, "ckpt_io", arg=1), Fault(20, "ckpt_io", arg=2)))
+    inj = Injector(plan)
+    detail = {}
+    with tempfile.TemporaryDirectory() as d:
+        with armed_checkpoint(inj):
+            C.save(d, 10, params)
+            C.save(d, 20, params)
+        zeros = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), params)
+        ok = True
+        for step in (10, 20):
+            got = D.tree_digest(C.restore(d, step, zeros))
+            detail[f"step{step}_digest_ok"] = got == want
+            ok = ok and got == want
+        detail["landed_attempts"] = [e["attempt"] for e in inj.history]
+        detail["no_torn_tmp"] = not any(
+            n.startswith(".tmp") for n in os.listdir(d))
+        ok = (ok and detail["no_torn_tmp"]
+              and detail["landed_attempts"] == [0, 0, 1])
+        # exhausted retries must surface the injected error, publish nothing
+        plan2 = FaultPlan(name="dead-io", faults=(Fault(30, "ckpt_io",
+                                                        arg=C.IO_RETRIES + 5),))
+        try:
+            with armed_checkpoint(Injector(plan2)):
+                C.save(d, 30, params)
+            detail["exhausted_raises"] = False
+        except InjectedIOError:
+            detail["exhausted_raises"] = True
+        detail["exhausted_unpublished"] = 30 not in C.available_steps(d)
+        ok = ok and detail["exhausted_raises"] and detail["exhausted_unpublished"]
+    return _cell("ckpt_io_retry", plan, inj, ok, {}, detail)
+
+
+def cell_seeded_mix(ctx, base, sampled, seed):
+    from repro.faults import FaultPlan
+    plan = FaultPlan.seeded(seed, steps=40, rate=0.35,
+                            name=f"mix-seed{seed}")
+    return _serve_fault_cell(ctx, base, sampled, f"seeded_mix_{seed}", plan)
+
+
+CELLS = {
+    "unarmed_noop": cell_unarmed_noop,
+    "pool_exhaustion": cell_pool_exhaustion,
+    "slot_revocation": cell_slot_revocation,
+    "decode_stall": cell_decode_stall,
+    "deadlines": cell_deadlines,
+    "load_shedding": cell_load_shedding,
+    "engine_crash_restore": cell_engine_crash_restore,
+    "ckpt_io_retry": cell_ckpt_io_retry,
+    "seeded_mix_1": lambda c, b, s: cell_seeded_mix(c, b, s, 1),
+    "seeded_mix_2": lambda c, b, s: cell_seeded_mix(c, b, s, 2),
+}
+
+
+def run_matrix(out: Optional[str] = None, cells: Optional[List[str]] = None,
+               sampled: bool = True) -> Dict:
+    """Run the conformance matrix; optionally write the JSON artifact."""
+    ctx = _ctx()
+    eng = _engine(ctx, _scfg(sampled))
+    _submit_all(eng, ctx)
+    base = eng.run()
+    report = {
+        "format": 1,
+        "config": {"arch": ARCH, "reduced": True, "gen": GEN,
+                   "prompt_lens": PROMPT_LENS, "sampled": sampled,
+                   **ENGINE_KW},
+        "baseline_tokens_sha256": _tok_sha(base),
+        "cells": [],
+    }
+    for name in (cells if cells is not None else sorted(CELLS)):
+        report["cells"].append(CELLS[name](ctx, base, sampled))
+    report["ok"] = all(c["ok"] for c in report["cells"])
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default="chaos_conformance.json")
+    p.add_argument("--cells", nargs="*", default=None,
+                   help="subset of cells (default: all)")
+    p.add_argument("--greedy", action="store_true",
+                   help="greedy sampling instead of temperature=0.7")
+    args = p.parse_args(argv)
+    report = run_matrix(out=args.out, cells=args.cells,
+                        sampled=not args.greedy)
+    for c in report["cells"]:
+        print(f"  {'PASS' if c['ok'] else 'FAIL'}  {c['cell']:24s} "
+              f"plan={c['plan']}  landed={c['faults_landed']}")
+    print(("chaos conformance: OK" if report["ok"]
+           else "chaos conformance: FAILED") + f" -> {args.out}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

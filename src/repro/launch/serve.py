@@ -92,10 +92,19 @@ def _continuous(cfg, params, args):
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices "
               f"(tokens bitwise identical to single-device)")
+    injector = None
+    if args.chaos is not None:
+        from repro.faults import FaultPlan, Injector
+        plan = FaultPlan.seeded(args.chaos, steps=16 * args.gen, rate=0.2,
+                                name=f"serve-chaos-{args.chaos}")
+        injector = Injector(plan)
+        print(f"chaos armed: {plan.key()} ({len(plan)} scheduled faults; "
+              "tokens stay bitwise identical — README §Robustness)")
     max_seq = -(-(args.prompt_len + args.gen) // page) * page
     eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_seq=max_seq,
                            page_size=page, prefill_chunk=min(32, args.prompt_len),
-                           scfg=SampleConfig(seed=args.seed), mesh=mesh)
+                           scfg=SampleConfig(seed=args.seed), mesh=mesh,
+                           faults=injector)
     rng = np.random.RandomState(args.seed)
     for i in range(args.requests):
         plen = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1)
@@ -108,6 +117,10 @@ def _continuous(cfg, params, args):
     print(f"continuous: {args.requests} requests / {args.slots} slots, "
           f"{total} tokens in {dt:.2f}s ({total / max(1e-9, dt):.1f} tok/s, "
           f"{eng.decode_steps} decode steps)")
+    if injector is not None:
+        print(f"chaos: {len(injector.history)} faults landed, "
+              f"{eng.preemptions} preemptions, landing digest "
+              f"{injector.history_digest()[:16]}")
     print("request 0 tokens:", out[0][:16].tolist())
     return out
 
@@ -131,10 +144,17 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help='mesh shape "RxC" as (data, model), e.g. 2x2; '
                          "overrides --tp")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm a seeded repro.faults plan (pool exhaustion, "
+                         "slot revocation, decode stalls) against the "
+                         "continuous engine; tokens are bitwise invariant "
+                         "to it (README §Robustness)")
     args = ap.parse_args(argv)
 
     if (args.tp > 1 or args.mesh) and args.engine != "continuous":
         ap.error("--tp/--mesh apply to --engine continuous")
+    if args.chaos is not None and args.engine != "continuous":
+        ap.error("--chaos applies to --engine continuous")
 
     cfg = registry.get(args.arch)
     if args.reduced:

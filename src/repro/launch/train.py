@@ -79,6 +79,13 @@ def main(argv=None):
                          "live fingerprint stream is compared against it and "
                          "the first mismatch fires a fingerprint_divergence "
                          "event")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm a seeded repro.faults checkpoint-IO plan: "
+                         "saves at random --ckpt-every multiples fail their "
+                         "first 1..IO_RETRIES write attempts and are absorbed "
+                         "by the writer's bounded deterministic retry — the "
+                         "run's loss/digests are unchanged (README "
+                         "§Robustness)")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -179,55 +186,80 @@ def main(argv=None):
         from repro.launch.heartbeat import Monitor
         monitor = Monitor(on_hang=lambda: os._exit(42))
         monitor.start_watchdog()
+
+    injector = None
+    if args.chaos is not None:
+        from repro.faults import FaultPlan, Injector
+        plan = FaultPlan.seeded_ckpt(args.chaos, steps=args.steps,
+                                     every=args.ckpt_every, rate=0.5,
+                                     max_failures=C.IO_RETRIES,
+                                     name=f"train-chaos-{args.chaos}")
+        injector = Injector(plan, tracker=tracker)
+        print(f"[chaos] armed {plan.key()} ({len(plan)} flaky saves; all "
+              "within the writer's retry budget)", flush=True)
+
     meter = StepMeter(modeled_step_s=modeled_step_s)
     tracking = args.track is not None
     tokens_per_step = args.batch * args.seq
+    from repro.faults import armed_checkpoint
     pending = None
     t0 = time.time()
-    for step in range(start, args.steps):
-        if args.die_at_step is not None and step == args.die_at_step:
-            print(f"simulated failure at step {step}", flush=True)
-            os._exit(17)
-        batch = data.batch(step)
-        ts = time.time()
-        state, metrics = step_fn(state, batch)
-        if chain is not None and (step + 1) % args.verify_every == 0:
-            chain.append(step + 1, state)
-        if monitor is not None:
-            jax.block_until_ready(metrics["loss"])
-            if monitor.step(time.time() - ts) == "straggler":
-                print(f"[heartbeat] straggler step {step} "
-                      f"({time.time() - ts:.2f}s vs baseline "
-                      f"{monitor.baseline:.2f}s)", flush=True)
-        if tracking:
-            # block before reading the clock: the event times real step work,
-            # not dispatch. The sync only happens when --track asked for it.
-            jax.block_until_ready(metrics["loss"])
-            payload = meter.update(tokens_per_step, time.time() - ts)
-            payload.update(S.step_event(metrics))
-            tracker.log("step", payload, step=step + 1)
-        if alarm is not None and "state_fingerprint" in metrics:
-            if alarm.observe(step + 1, metrics["state_fingerprint"]):
-                print(f"[verify] fingerprint divergence at step {step + 1} "
-                      f"(see tracker)", flush=True)
-        if (step + 1) % args.log_every == 0 or step == start:
-            m = {k: float(v) for k, v in metrics.items()}
-            dt = (time.time() - t0) / max(1, step + 1 - start)
-            print(f"step {step + 1} loss={m['loss']:.4f} "
-                  f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
-                  f"({dt * 1e3:.0f} ms/step)", flush=True)
-        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            if pending is not None:
-                pending.join()
-            pending = C.save(args.ckpt_dir, step + 1, state, async_=True)
-            if chain is not None:       # chain survives a crash after save
-                _persist_chain()
-    if pending is not None:
-        pending.join()
+    # armed_checkpoint(None) is a no-op; when --chaos armed an injector, the
+    # hook must stay installed through the *final* async save's join — the
+    # writer thread consults it mid-write.
+    with armed_checkpoint(injector):
+        for step in range(start, args.steps):
+            if args.die_at_step is not None and step == args.die_at_step:
+                print(f"simulated failure at step {step}", flush=True)
+                os._exit(17)
+            batch = data.batch(step)
+            ts = time.time()
+            state, metrics = step_fn(state, batch)
+            if chain is not None and (step + 1) % args.verify_every == 0:
+                chain.append(step + 1, state)
+            if monitor is not None:
+                jax.block_until_ready(metrics["loss"])
+                if monitor.step(time.time() - ts) == "straggler":
+                    print(f"[heartbeat] straggler step {step} "
+                          f"({time.time() - ts:.2f}s vs baseline "
+                          f"{monitor.baseline:.2f}s)", flush=True)
+            if tracking:
+                # block before reading the clock: the event times real step
+                # work, not dispatch. The sync only happens when --track
+                # asked for it.
+                jax.block_until_ready(metrics["loss"])
+                payload = meter.update(tokens_per_step, time.time() - ts)
+                payload.update(S.step_event(metrics))
+                tracker.log("step", payload, step=step + 1)
+            if alarm is not None and "state_fingerprint" in metrics:
+                if alarm.observe(step + 1, metrics["state_fingerprint"]):
+                    print(f"[verify] fingerprint divergence at step "
+                          f"{step + 1} (see tracker)", flush=True)
+            if (step + 1) % args.log_every == 0 or step == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = (time.time() - t0) / max(1, step + 1 - start)
+                print(f"step {step + 1} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+                      f"({dt * 1e3:.0f} ms/step)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                if pending is not None:
+                    pending.join()
+                pending = C.save(args.ckpt_dir, step + 1, state, async_=True)
+                if chain is not None:   # chain survives a crash after save
+                    _persist_chain()
+        if pending is not None:
+            pending.join()
     if monitor is not None:
         monitor.stop()
     final_loss = float(metrics["loss"])
     summary = {"final_step": args.steps, "final_loss": final_loss}
+    if injector is not None:
+        summary["chaos_plan"] = injector.plan.key()
+        summary["chaos_faults_landed"] = len(injector.history)
+        summary["chaos_landing_digest"] = injector.history_digest()
+        print(f"[chaos] {len(injector.history)} injected IO failures "
+              f"absorbed by retry; landing digest "
+              f"{injector.history_digest()[:16]}", flush=True)
     if chain is not None:
         _persist_chain()
         print(f"[verify] digest chain head {chain.head} "

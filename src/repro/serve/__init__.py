@@ -8,14 +8,25 @@ batch size, prompt padding, request arrival order, or prefill chunk size.
   scheduler.py  FCFS-by-request-id admission, lowest-slot assignment, eviction
   engine.py     ``Engine`` (static-batch baseline) and ``ContinuousEngine``
                 (chunked prefill + in-flight batching over cache slots)
+  snapshot.py   full-engine snapshot/restore through the manifest-v2 digest
+                machinery (crash recovery, README §Robustness)
 
 The kernel underneath is :mod:`repro.kernels.decode` — a split-KV attention
 whose page reduction order is serialized (ascending page-table position), the
 decode-time analogue of ``repro.kernels.flash_bwd.serialize_schedule``.
-"""
-from repro.serve.engine import ContinuousEngine, Engine, SampleConfig
-from repro.serve.kv_cache import PagedKVCache, PagedLayout
-from repro.serve.scheduler import FCFSScheduler, Request
 
-__all__ = ["ContinuousEngine", "Engine", "SampleConfig", "PagedKVCache",
-           "PagedLayout", "FCFSScheduler", "Request"]
+The contract extends to faulty conditions (README §Robustness): with an armed
+:class:`repro.faults.Injector` the engine preempts/restores deterministically,
+sheds load by queue state (:class:`QueueFull`), cancels on step-deadlines, and
+resumes from snapshots — every completed request bitwise equal to a fault-free
+run (tests/test_chaos_conformance.py).
+"""
+from repro.serve.engine import (ContinuousEngine, Engine, QueueFull,
+                                SampleConfig)
+from repro.serve.kv_cache import PagedKVCache, PagedLayout, PoolExhausted
+from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.snapshot import restore_engine, save_engine_snapshot
+
+__all__ = ["ContinuousEngine", "Engine", "SampleConfig", "QueueFull",
+           "PagedKVCache", "PagedLayout", "PoolExhausted", "FCFSScheduler",
+           "Request", "save_engine_snapshot", "restore_engine"]

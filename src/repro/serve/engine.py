@@ -27,12 +27,26 @@ padding, arrival order, and prefill chunk size — and, with the optional
 across tensor-parallel degrees and mesh shapes too: every row-parallel
 reduction takes the canonical virtual-shard fold form
 (:mod:`repro.dist.fold`), so TP=1/2/4 compute the same fold tree bitwise.
+
+The contract also survives faults (README §Robustness, proven by
+tests/test_chaos_conformance.py): with ``faults=`` an armed
+:class:`repro.faults.Injector`, the engine absorbs KV-pool exhaustion, slot
+revocation and decode stalls by **deterministic preemption** — the victim is
+always the active request with the highest id; its pages are freed and it is
+later restored by chunked-prefill *recompute* of its full generated prefix,
+so the continuation is bitwise identical to never having been preempted
+(already-sampled tokens are kept, never re-drawn).  ``max_queue_depth``
+bounds admission with load shedding decided purely by (request id, queue
+state); ``deadline_steps`` cancels in *engine steps*, never wall clock; and
+``snapshot_dir``/``snapshot_every`` persist the full engine state through the
+manifest-v2 digest machinery so a crashed engine resumes every in-flight
+stream bitwise (:mod:`repro.serve.snapshot`).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +55,22 @@ import numpy as np
 from repro.models import transformer as T
 from repro.serve.kv_cache import PagedKVCache, PagedLayout
 from repro.serve.scheduler import FCFSScheduler, Request
+
+
+class QueueFull(RuntimeError):
+    """Deterministic load shedding: the bounded queue rejected a request.
+
+    The rejection is a pure function of (request id, queue state) — never of
+    arrival timing — so the same request stream is shed identically on every
+    run.  Carries ``(req_id, depth)``; the engine also records the rejection
+    in :attr:`ContinuousEngine.rejected`.
+    """
+
+    def __init__(self, req_id: int, depth: int):
+        self.req_id, self.depth = req_id, depth
+        super().__init__(
+            f"request {req_id} shed: queue depth is at the "
+            f"max_queue_depth={depth} bound")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,7 +208,10 @@ class ContinuousEngine:
     def __init__(self, cfg, params, *, n_slots: int = 4, max_seq: int = 128,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: int = 32, scfg: SampleConfig = SampleConfig(),
-                 tracker=None, mesh=None, capture_prefill_logits: bool = False):
+                 tracker=None, mesh=None, capture_prefill_logits: bool = False,
+                 faults=None, max_queue_depth: Optional[int] = None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: Optional[int] = None):
         """``mesh``: optional :class:`jax.sharding.Mesh` with a ``"model"``
         axis — the jitted step becomes the TP-sharded shard_map step
         (:mod:`repro.serve.sharded`); tokens/logprobs are bitwise identical
@@ -186,6 +219,16 @@ class ContinuousEngine:
         topology-invariance contract, README §Serving).
         ``capture_prefill_logits``: keep each request's per-position prefill
         logits in ``self.prefill_logits[req_id]`` (train≡serve parity tests).
+
+        Robustness knobs (README §Robustness; all default-off, and the
+        default path is bitwise identical to an engine without them):
+        ``faults``: an armed :class:`repro.faults.Injector` whose plan this
+        engine consumes at the matching step indices; ``max_queue_depth``:
+        bound on pending requests — ``submit`` beyond it raises
+        :class:`QueueFull` deterministically; ``snapshot_dir`` +
+        ``snapshot_every``: persist a full engine snapshot every N engine
+        steps (manifest-v2 digests, :mod:`repro.serve.snapshot`) so
+        :meth:`from_snapshot` can resume after a crash.
         """
         assert T.supports_paged(cfg), (
             "paged serving covers decoder-only, attention-only LMs")
@@ -214,6 +257,23 @@ class ContinuousEngine:
         self._next_id = 0
         self.decode_steps = 0               # telemetry for tests/benchmarks
 
+        # ----- robustness state (all inert until a knob or fault uses it)
+        self.faults = faults
+        self.max_queue_depth = max_queue_depth
+        self.snapshot_dir, self.snapshot_every = snapshot_dir, snapshot_every
+        self.engine_steps = 0               # the deterministic clock: every
+        #                                     deadline/fault/snapshot is keyed
+        #                                     to this counter, never wall time
+        self.preemptions = 0
+        self.rejected: Dict[int, str] = {}          # req_id -> shed reason
+        self.cancelled: Dict[int, np.ndarray] = {}  # req_id -> partial tokens
+        self._deadline: Dict[int, int] = {}         # req_id -> absolute step
+        # req_id -> (produced, logprobs) of a preempted request awaiting its
+        # recompute-restore re-admission
+        self._resume: Dict[int, Tuple[List[int], List[float]]] = {}
+        self._stall_until = 0               # decode suppressed before this step
+        self._quarantine: List[Tuple[int, List[int]]] = []  # (release, pages)
+
         self.mesh = mesh
         if mesh is None:
             self._step = _paged_step_fn(cfg)
@@ -237,30 +297,57 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------ request API
     def submit(self, tokens, *, req_id: Optional[int] = None,
-               max_new_tokens: int = 16) -> int:
-        """Queue a request. Lower ids are served first (FCFS by id)."""
+               max_new_tokens: int = 16,
+               deadline_steps: Optional[int] = None) -> int:
+        """Queue a request. Lower ids are served first (FCFS by id).
+
+        Validates the *whole worst case* up front — total positions vs
+        ``max_seq`` and the worst-case page budget vs the pool — raising a
+        ``ValueError`` that names the violated limit, so an unfittable
+        request can never reach ``_admission_check`` and head-of-line block
+        the engine.  ``deadline_steps``: cancel the request (freeing its
+        pages immediately) if it has not finished within that many *engine
+        steps* from now — a deterministic deadline, never a wall clock.
+        """
         if req_id is None:
             req_id = self._next_id
         tokens = tuple(int(t) for t in np.asarray(tokens).reshape(-1))
-        if req_id in self.results or any(
-                st.req.id == req_id for st in self._slots.values()):
+        if (req_id in self.results or req_id in self.cancelled
+                or req_id in self.rejected or any(
+                    st.req.id == req_id for st in self._slots.values())):
             # the scheduler only guards pending/active ids; a finished id
             # would silently overwrite its result and corrupt the FCFS clock
             raise ValueError(f"request id {req_id} was already served")
-        if len(tokens) + max_new_tokens > self.max_seq:
+        total = len(tokens) + max_new_tokens
+        if total > self.max_seq:
             # ValueError, not assert: user-facing validation must survive -O
             raise ValueError(
-                f"request needs {len(tokens) + max_new_tokens} positions; "
-                f"slot capacity is {self.max_seq}")
-        need = self.cache.layout.pages_for(len(tokens) + max_new_tokens)
+                f"request {req_id} needs {total} positions "
+                f"({len(tokens)} prompt + {max_new_tokens} new); "
+                f"slot capacity is max_seq={self.max_seq}")
+        need = self.cache.layout.pages_for(total)
         if need > self.cache.layout.n_pages:
             # FCFS admission head-of-line blocks on an unfittable request
             # forever — reject it at the door instead.
             raise ValueError(
-                f"request {req_id} needs {need} pages but the pool only has "
-                f"{self.cache.layout.n_pages}; raise n_pages or shrink the "
-                f"request")
+                f"request {req_id} needs {need} pages (worst case) but the "
+                f"pool only has n_pages={self.cache.layout.n_pages}; raise "
+                f"n_pages or shrink the request")
+        if deadline_steps is not None and deadline_steps <= 0:
+            raise ValueError(f"deadline_steps must be > 0, got "
+                             f"{deadline_steps}")
+        if (self.max_queue_depth is not None
+                and len(self.sched.pending) >= self.max_queue_depth):
+            # deterministic load shedding: queue state is a pure function of
+            # the request stream, so the shed set replays identically
+            self.rejected[req_id] = "queue_full"
+            self._next_id = max(self._next_id, req_id + 1)
+            self.tracker.log("serve_shed", {
+                "request_id": req_id, "queue_depth": self.max_queue_depth})
+            raise QueueFull(req_id, self.max_queue_depth)
         self.sched.submit(Request(req_id, tokens, max_new_tokens))
+        if deadline_steps is not None:
+            self._deadline[req_id] = self.engine_steps + deadline_steps
         self._next_id = max(self._next_id, req_id + 1)   # only after validation
         self.tracker.log("serve_submit", {
             "request_id": req_id, "prompt_len": len(tokens),
@@ -268,9 +355,17 @@ class ContinuousEngine:
         return req_id
 
     def run(self) -> Dict[int, np.ndarray]:
-        """Drive steps until every submitted request finished; return tokens."""
+        """Drive steps until every submitted request finished; return tokens.
+
+        Completed requests only: shed requests are in ``self.rejected`` and
+        deadline-cancelled ones in ``self.cancelled``.  When the stream
+        drains, any pages still quarantined by an injected exhaustion fault
+        are force-released, so a drained engine always has its full pool back
+        (the zero-leak invariant the preemption soak asserts).
+        """
         while not self.sched.idle:
             self.step()
+        self._release_quarantine(self.engine_steps, force=True)
         return {rid: np.asarray(toks, np.int32)
                 for rid, toks in self.results.items()}
 
@@ -298,26 +393,57 @@ class ContinuousEngine:
 
         return fits
 
-    def _prefill(self, slot: int, req: Request) -> None:
-        """Chunked prefill of one request; samples its first token."""
-        lay = self.cache.layout
-        self.cache.alloc(slot, lay.pages_for(len(req.tokens) + req.max_new_tokens))
-        plen, C = len(req.tokens), self.prefill_chunk
-        prompt = np.asarray(req.tokens, np.int32)
+    def _chunked_prefill(self, slot: int, tokens: np.ndarray,
+                         rows: Optional[list] = None):
+        """Run ``tokens`` through the paged step in fixed-size chunks, writing
+        their K/V into ``slot``'s pages. Returns the last chunk's logits.
+        Shared by fresh prefill and preemption-restore recompute — same code
+        path, so the invariance-by-chunk-size proof covers both."""
+        plen, C = len(tokens), self.prefill_chunk
         table = self.cache.device_page_table([slot])     # fixed for the prefill
         logits = None
-        rows = []
         for start in range(0, plen, C):
             pos = np.arange(start, start + C, dtype=np.int32)
             valid = pos < plen
-            toks = np.where(valid, prompt[np.minimum(pos, plen - 1)], 0)
+            toks = np.where(valid, tokens[np.minimum(pos, plen - 1)], 0)
             wp, wo = self.cache.write_targets(slot, pos, valid)
             logits, self.cache.pools = self._step(
                 self.params, self.cache.pools,
                 jnp.asarray(toks)[None], jnp.asarray(pos)[None], table,
                 jnp.asarray(wp), jnp.asarray(wo))
-            if self._capture:            # valid rows only, raw dtype (bitwise)
+            if rows is not None:         # valid rows only, raw dtype (bitwise)
                 rows.append(np.asarray(logits[0, : min(C, plen - start)]))
+        return logits
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Chunked prefill of one request; samples its first token.
+
+        For a request preempted earlier (``_resume`` holds its generated
+        prefix), this is the *restore* path: recompute K/V for
+        ``prompt + produced[:-1]`` — every position whose K/V the decode loop
+        had already written — and keep the emitted tokens as-is.  Nothing is
+        re-sampled, so the continuation is bitwise identical to never having
+        been preempted.
+        """
+        lay = self.cache.layout
+        self.cache.alloc(slot, lay.pages_for(len(req.tokens) + req.max_new_tokens))
+        plen, C = len(req.tokens), self.prefill_chunk
+        resume = self._resume.pop(req.id, None)
+        if resume is not None:
+            produced, lps = resume
+            prefix = np.asarray(list(req.tokens) + list(produced[:-1]),
+                                np.int32)
+            self._chunked_prefill(slot, prefix)
+            self._slots[slot] = st = _Active(req, list(produced), list(lps))
+            self.tracker.log("serve_restore", {
+                "request_id": req.id, "slot": slot,
+                "recomputed_positions": len(prefix),
+                "tokens_kept": len(produced)})
+            self._finish_check(st)
+            return
+        rows = [] if self._capture else None
+        logits = self._chunked_prefill(slot, np.asarray(req.tokens, np.int32),
+                                       rows)
         if self._capture:
             self.prefill_logits[req.id] = np.concatenate(rows, axis=0)
         first, first_lp = self._sampler(logits[:, (plen - 1) % C],
@@ -336,12 +462,117 @@ class ContinuousEngine:
                 or len(st.produced) >= st.req.max_new_tokens):
             st.done = True
 
+    # ------------------------------------------------------ fault machinery
+    def _victim(self) -> Optional[int]:
+        """Deterministic preemption victim: the active slot holding the
+        highest request id (the youngest stream loses — FCFS fairness), or
+        None when nothing is active."""
+        if not self._slots:
+            return None
+        return max(self._slots, key=lambda s: self._slots[s].req.id)
+
+    def _preempt(self, slot: int, reason: str) -> None:
+        """Evict one active request: free its pages now, stash its generated
+        prefix, and re-queue it for recompute-restore (see ``_prefill``)."""
+        st = self._slots.pop(slot)
+        self._resume[st.req.id] = (list(st.produced), list(st.logprobs))
+        self.cache.free_slot(slot)
+        self.sched.release(slot)
+        self.sched.submit(st.req)       # re-enters FCFS at its original id
+        self.preemptions += 1
+        self.tracker.log("serve_preempt", {
+            "request_id": st.req.id, "slot": slot, "reason": reason,
+            "tokens_kept": len(st.produced)}, step=self.engine_steps)
+
+    def _apply_faults(self, step_idx: int) -> None:
+        """Consume this step's scheduled faults. May raise ``EngineCrash``."""
+        from repro.faults import EngineCrash
+        for f in self.faults.step_faults(step_idx):
+            if f.kind == "crash":
+                if self.faults.consume_crash(f):
+                    self.faults.record(f, engine_step=step_idx)
+                    raise EngineCrash(step_idx)
+            elif f.kind == "decode_stall":
+                self._stall_until = max(self._stall_until, step_idx + f.arg)
+                self.faults.record(f, engine_step=step_idx,
+                                   stalled_until=self._stall_until)
+            elif f.kind == "revoke_slot":
+                revoked = []
+                for _ in range(max(1, f.arg)):
+                    victim = self._victim()
+                    if victim is None:
+                        break
+                    revoked.append(self._slots[victim].req.id)
+                    self._preempt(victim, reason="slot_revoked")
+                self.faults.record(f, engine_step=step_idx, victims=revoked)
+            elif f.kind == "pool_exhaust":
+                want = min(f.arg, self.cache.layout.n_pages)
+                evicted = []
+                while self.cache.free_pages < want:
+                    victim = self._victim()
+                    if victim is None:
+                        break
+                    evicted.append(self._slots[victim].req.id)
+                    self._preempt(victim, reason="pool_exhausted")
+                take = min(want, self.cache.free_pages)
+                pages = self.cache.quarantine(take)
+                if pages:
+                    self._quarantine.append((step_idx + f.duration, pages))
+                self.faults.record(f, engine_step=step_idx, pages=len(pages),
+                                   victims=evicted)
+
+    def _release_quarantine(self, step_idx: int, force: bool = False) -> None:
+        keep = []
+        for release, pages in self._quarantine:
+            if force or release <= step_idx:
+                self.cache.release_quarantine(pages)
+            else:
+                keep.append((release, pages))
+        self._quarantine = keep
+
+    def _cancel_expired(self, step_idx: int) -> None:
+        """Cancel every request whose step-deadline has passed: pending ones
+        drop from the queue, active ones free slot+pages immediately; partial
+        tokens land in ``self.cancelled`` (never ``results``)."""
+        if not self._deadline:
+            return
+        for rid in sorted(self.sched.pending):
+            if self._deadline.get(rid, step_idx + 1) <= step_idx:
+                del self.sched.pending[rid]
+                produced, _ = self._resume.pop(rid, ([], []))
+                self.cancelled[rid] = np.asarray(produced, np.int32)
+                del self._deadline[rid]
+                self.tracker.log("serve_cancel", {
+                    "request_id": rid, "where": "pending",
+                    "tokens_kept": len(produced)}, step=step_idx)
+        for slot in sorted(self._slots):
+            rid = self._slots[slot].req.id
+            if self._deadline.get(rid, step_idx + 1) <= step_idx:
+                st = self._slots.pop(slot)
+                self.cancelled[rid] = np.asarray(st.produced, np.int32)
+                self.cache.free_slot(slot)          # immediate reclamation
+                self.sched.release(slot)
+                del self._deadline[rid]
+                self.tracker.log("serve_cancel", {
+                    "request_id": rid, "where": "active",
+                    "tokens_kept": len(st.produced)}, step=step_idx)
+
+    # ----------------------------------------------------------------- step
     def step(self) -> None:
-        """One engine step: admit+prefill, then one batched decode step."""
+        """One engine step: faults → deadline sweep → admit+prefill → one
+        batched decode step → reap.  ``engine_steps`` is the deterministic
+        clock every fault/deadline/snapshot keys to."""
+        step_idx = self.engine_steps
+        if self.faults is not None:
+            self._apply_faults(step_idx)            # may raise EngineCrash
+        self._release_quarantine(step_idx)
+        self._cancel_expired(step_idx)
         for slot, req in self.sched.admit(self._admission_check()):
             self._prefill(slot, req)
 
-        live = [s for s, st in self._slots.items() if not st.done]
+        stalled = step_idx < self._stall_until
+        live = ([] if stalled
+                else [s for s, st in self._slots.items() if not st.done])
         if live:
             lay = self.cache.layout
             n = lay.n_slots
@@ -380,9 +611,34 @@ class ContinuousEngine:
             self.results[st.req.id] = st.produced
             self.result_logprobs[st.req.id] = np.asarray(st.logprobs,
                                                          np.float32)
+            self._deadline.pop(st.req.id, None)
             self.cache.free_slot(s)
             self.sched.release(s)
             self.tracker.log("serve_done", {
                 "request_id": st.req.id, "slot": s,
                 "n_tokens": len(st.produced),
                 "decode_steps": self.decode_steps})
+
+        self.engine_steps = step_idx + 1
+        if (self.snapshot_dir is not None and self.snapshot_every
+                and self.engine_steps % self.snapshot_every == 0):
+            self.save_snapshot()
+
+    # ------------------------------------------------------ snapshot/restore
+    def save_snapshot(self, directory: Optional[str] = None) -> int:
+        """Persist the full engine state (scheduler, page tables, per-request
+        sampling state, emitted tokens, KV pools) at the current engine step
+        through the manifest-v2 digest machinery. Returns the snapshot step."""
+        from repro.serve import snapshot as SN
+        return SN.save_engine_snapshot(self, directory or self.snapshot_dir)
+
+    @classmethod
+    def from_snapshot(cls, directory: str, cfg, params, *,
+                      step: Optional[int] = None, faults=None, tracker=None,
+                      mesh=None) -> "ContinuousEngine":
+        """Rebuild an engine from a snapshot (latest by default) and resume:
+        every stream that was in flight completes bitwise identically to an
+        uncrashed run (README §Robustness)."""
+        from repro.serve import snapshot as SN
+        return SN.restore_engine(directory, cfg, params, step=step,
+                                 faults=faults, tracker=tracker, mesh=mesh)

@@ -29,12 +29,28 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Tuple
+from typing import List, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+
+
+class PoolExhausted(RuntimeError):
+    """Typed pool-OOM: the page pool cannot cover an allocation.
+
+    Carries ``(slot, requested, free)`` so callers (admission, the fault
+    injector, error reporting) can act on the shortfall without parsing the
+    message.  A ``RuntimeError`` subclass, so pre-existing ``except
+    RuntimeError`` handling keeps working.
+    """
+
+    def __init__(self, slot: int, requested: int, free: int):
+        self.slot, self.requested, self.free = slot, requested, free
+        super().__init__(
+            f"paged KV pool exhausted: slot {slot} wants {requested} pages, "
+            f"free {free} (admission must reserve worst-case up front)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,10 +90,13 @@ class PagedKVCache:
         """Reserve ``n_pages`` lowest-id free pages for ``slot``."""
         held = int(self.pages_held[slot])
         if n_pages > self.free_pages:
-            raise RuntimeError(
-                f"paged KV pool OOM: want {n_pages}, free {self.free_pages} "
-                f"(admission must reserve worst-case up front)")
-        assert held + n_pages <= self.layout.max_pages_per_slot, (slot, n_pages)
+            raise PoolExhausted(slot, n_pages, self.free_pages)
+        if held + n_pages > self.layout.max_pages_per_slot:
+            # ValueError, not assert: the per-slot capacity bound is a
+            # user-reachable limit and must survive -O
+            raise ValueError(
+                f"slot {slot} cannot hold {held + n_pages} pages; "
+                f"max_pages_per_slot={self.layout.max_pages_per_slot}")
         for j in range(held, held + n_pages):
             self.page_table[slot, j] = heapq.heappop(self._free)
         self.pages_held[slot] = held + n_pages
@@ -88,6 +107,24 @@ class PagedKVCache:
             heapq.heappush(self._free, int(self.page_table[slot, j]))
         self.page_table[slot, :] = self.layout.trash_page
         self.pages_held[slot] = 0
+
+    # ----------------------------------------------------- fault injection
+    def quarantine(self, n_pages: int) -> List[int]:
+        """Withdraw the ``n_pages`` lowest-id free pages from the pool.
+
+        The fault-injection form of memory pressure (repro.faults): the pages
+        vanish from ``free_pages`` (so admission and ``alloc`` see a smaller
+        pool) without touching any slot's allocation.  Returns the withdrawn
+        page ids; hand them back via :meth:`release_quarantine`.
+        """
+        if n_pages > self.free_pages:
+            raise PoolExhausted(-1, n_pages, self.free_pages)
+        return [heapq.heappop(self._free) for _ in range(n_pages)]
+
+    def release_quarantine(self, pages: List[int]) -> None:
+        """Return quarantined pages to the free pool."""
+        for p in pages:
+            heapq.heappush(self._free, int(p))
 
     # ------------------------------------------------------- device plumbing
     def device_page_table(self, slots=None) -> jnp.ndarray:

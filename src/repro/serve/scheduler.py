@@ -77,18 +77,31 @@ class FCFSScheduler:
         ``fits(req)`` is the engine's page-capacity check.  Stops at the first
         request that does not fit: skipping ahead would let a small late
         request starve an earlier large one (head-of-line FCFS, deterministic).
+
+        Exception-safe with the *strong* guarantee: if ``fits`` raises (a
+        typed ``PoolExhausted``, an injected fault, …), every admission made
+        earlier in this call is rolled back — slots return to the free heap,
+        requests to pending — so the caller never loses a (slot, request)
+        pair it was never told about, and no slot leaks.
         """
-        admitted = []
-        for rid in sorted(self.pending):
-            if not self._free_slots:
-                break
-            req = self.pending[rid]
-            if not fits(req):
-                break
-            slot = heapq.heappop(self._free_slots)
-            del self.pending[rid]
-            self.active[slot] = req
-            admitted.append((slot, req))
+        admitted: List[Tuple[int, Request]] = []
+        try:
+            for rid in sorted(self.pending):
+                if not self._free_slots:
+                    break
+                req = self.pending[rid]
+                if not fits(req):
+                    break
+                slot = heapq.heappop(self._free_slots)
+                del self.pending[rid]
+                self.active[slot] = req
+                admitted.append((slot, req))
+        except BaseException:
+            for slot, req in admitted:      # roll back to the pre-call state
+                del self.active[slot]
+                heapq.heappush(self._free_slots, slot)
+                self.pending[req.id] = req
+            raise
         return admitted
 
     def release(self, slot: int) -> None:

@@ -1,0 +1,206 @@
+"""Engine snapshot/restore: a crashed engine resumes every stream bitwise.
+
+A snapshot is the *complete* deterministic state of a
+:class:`~repro.serve.engine.ContinuousEngine` at an engine-step boundary:
+
+  * the device KV pools (the only device state), and
+  * one host blob — scheduler queues, page tables + free heap, per-slot
+    decode state (emitted tokens, their sampled logprobs, the per-request
+    sampling key inputs are just ``(scfg.seed, request_id, token_index)`` so
+    they serialize as the tokens themselves), deadlines, preemption-resume
+    prefixes, quarantined pages, and every counter the engine keys faults and
+    deadlines to — encoded as canonical JSON in a uint8 leaf.
+
+Both ride through :func:`repro.ckpt.checkpoint.save` — the manifest-v2 path —
+so every leaf (pools *and* the host blob) gets a sha256 digest, writes are
+atomic tmp+rename, and a torn snapshot is never published.  Restore verifies
+each digest before trusting a byte, exactly like checkpoint restore.
+
+Snapshot directories use the checkpoint layout (``step_<k>/manifest.json``),
+so :func:`repro.ckpt.checkpoint.latest_step` / ``available_steps`` work on
+them unchanged; ``<k>`` is the *engine step* (the deterministic clock), never
+wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as C
+from repro.models import transformer as T
+from repro.serve.scheduler import Request
+from repro.verify import digest as D
+
+SNAPSHOT_FORMAT = 1
+
+
+def _cfg_key(cfg) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def _host_state(eng) -> Dict:
+    """The engine's host-side state as a JSON-able dict (ints, strs, and
+    floats — Python floats round-trip bitwise through canonical JSON)."""
+    sched = eng.sched
+    return {
+        "format": SNAPSHOT_FORMAT,
+        "cfg_key": _cfg_key(eng.cfg),
+        "geometry": {
+            "n_slots": eng.cache.layout.n_slots,
+            "max_seq": eng.max_seq,
+            "page_size": eng.cache.layout.page_size,
+            "n_pages": eng.cache.layout.n_pages,
+            "prefill_chunk": eng.prefill_chunk,
+            "max_queue_depth": eng.max_queue_depth,
+            "snapshot_every": eng.snapshot_every,
+        },
+        "scfg": dataclasses.asdict(eng.scfg),
+        "engine_steps": eng.engine_steps,
+        "decode_steps": eng.decode_steps,
+        "preemptions": eng.preemptions,
+        "next_id": eng._next_id,
+        "stall_until": eng._stall_until,
+        "pending": [[r.id, list(r.tokens), r.max_new_tokens]
+                    for _, r in sorted(sched.pending.items())],
+        "active": [[slot, st.req.id, list(st.req.tokens),
+                    st.req.max_new_tokens, list(st.produced),
+                    list(st.logprobs), bool(st.done)]
+                   for slot, st in sorted(eng._slots.items())],
+        "results": {str(rid): list(toks)
+                    for rid, toks in eng.results.items()},
+        "result_logprobs": {str(rid): np.asarray(lp, np.float32).tolist()
+                            for rid, lp in eng.result_logprobs.items()},
+        "rejected": {str(rid): why for rid, why in eng.rejected.items()},
+        "cancelled": {str(rid): np.asarray(t, np.int32).tolist()
+                      for rid, t in eng.cancelled.items()},
+        "deadline": {str(rid): d for rid, d in eng._deadline.items()},
+        "resume": {str(rid): [list(p), list(lp)]
+                   for rid, (p, lp) in eng._resume.items()},
+        "quarantine": [[release, list(pages)]
+                       for release, pages in eng._quarantine],
+        "page_table": eng.cache.page_table.tolist(),
+        "pages_held": eng.cache.pages_held.tolist(),
+        "free_pages": sorted(eng.cache._free),
+    }
+
+
+def save_engine_snapshot(eng, directory: str) -> int:
+    """Write the snapshot for the current engine step; returns that step."""
+    blob = json.dumps(_host_state(eng), sort_keys=True,
+                      separators=(",", ":")).encode()
+    tree = {"host": np.frombuffer(blob, np.uint8),
+            "pools": eng.cache.pools}
+    step = eng.engine_steps
+    C.save(directory, step, tree, keep_last=3)
+    eng.tracker.log("serve_snapshot", {"engine_step": step,
+                                       "directory": directory}, step=step)
+    return step
+
+
+def load_engine_snapshot(directory: str, step: Optional[int] = None):
+    """Read + digest-verify one snapshot. Returns ``(host_state, raw_arrays,
+    manifest)`` — ``raw_arrays`` holds the npz contents keyed by manifest
+    path (pools still in storage dtype; :func:`restore_engine` downcasts
+    against the reference pool structure before re-verifying digests)."""
+    if step is None:
+        step = C.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no engine snapshot under {directory}")
+    manifest = C.read_manifest(directory, step)
+    with np.load(os.path.join(directory, f"step_{step}",
+                              "arrays.npz")) as data:
+        raw = {k: data[k] for k in manifest["arrays"]}
+    host = raw["host"]
+    entry = manifest["arrays"]["host"]
+    if D.leaf_digest(host) != entry["digest"]:
+        raise ValueError(f"snapshot host-state digest mismatch at step "
+                         f"{step} — corrupted snapshot")
+    state = json.loads(host.tobytes().decode())
+    if state.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"snapshot format {state.get('format')} != "
+                         f"{SNAPSHOT_FORMAT}")
+    return state, raw, manifest
+
+
+def restore_engine(directory: str, cfg, params, *, step: Optional[int] = None,
+                   faults=None, tracker=None, mesh=None):
+    """Rebuild a :class:`ContinuousEngine` from a snapshot and hand it back
+    ready to ``run()`` — geometry and sampling config come from the snapshot,
+    so the caller only re-supplies what was never serialized (params, mesh,
+    an injector).  Every array leaf is digest-verified on the way in."""
+    from repro.serve.engine import ContinuousEngine, SampleConfig, _Active
+
+    state, raw, manifest = load_engine_snapshot(directory, step)
+    if state["cfg_key"] != _cfg_key(cfg):
+        raise ValueError(
+            "snapshot was taken under a different model config "
+            f"({state['cfg_key']} != {_cfg_key(cfg)}) — params/cfg must match "
+            "the crashed engine's")
+    g = state["geometry"]
+    eng = ContinuousEngine(
+        cfg, params, n_slots=g["n_slots"], max_seq=g["max_seq"],
+        page_size=g["page_size"], n_pages=g["n_pages"],
+        prefill_chunk=g["prefill_chunk"], scfg=SampleConfig(**state["scfg"]),
+        tracker=tracker, mesh=mesh, faults=faults,
+        max_queue_depth=g["max_queue_depth"], snapshot_dir=directory,
+        snapshot_every=g["snapshot_every"])
+
+    # ---- device pools: storage dtype -> original dtype, digest re-verified
+    ref = T.init_paged_cache(cfg, g["n_pages"] + 1, g["page_size"])
+    flat = jax.tree_util.tree_flatten_with_path(ref)[0]
+    restored = []
+    for path, leaf in flat:
+        key = "pools/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        entry = manifest["arrays"][key]
+        host = raw[key].astype(np.dtype(leaf.dtype))
+        if D.leaf_digest(host) != entry["digest"]:
+            raise ValueError(f"snapshot digest mismatch for '{key}' — "
+                             "corrupted or lossy round trip")
+        restored.append(jnp.asarray(host))
+    eng.cache.pools = jax.tree.unflatten(jax.tree.structure(ref), restored)
+
+    # ---- host state: allocator, scheduler, per-slot decode state, counters
+    lay = eng.cache.layout
+    eng.cache.page_table = np.asarray(state["page_table"], np.int32).reshape(
+        lay.n_slots, lay.max_pages_per_slot)
+    eng.cache.pages_held = np.asarray(state["pages_held"], np.int32)
+    eng.cache._free = list(state["free_pages"])     # already heap-ordered
+
+    eng.sched.pending = {rid: Request(rid, tuple(toks), mnt)
+                         for rid, toks, mnt in state["pending"]}
+    eng.sched.active = {}
+    eng._slots = {}
+    for slot, rid, toks, mnt, produced, lps, done in state["active"]:
+        req = Request(rid, tuple(toks), mnt)
+        eng.sched.active[slot] = req
+        eng._slots[slot] = _Active(req, list(produced), list(lps), done)
+    eng.sched._free_slots = [s for s in range(lay.n_slots)
+                             if s not in eng.sched.active]
+
+    eng.results = {int(r): list(t) for r, t in state["results"].items()}
+    eng.result_logprobs = {int(r): np.asarray(lp, np.float32)
+                           for r, lp in state["result_logprobs"].items()}
+    eng.rejected = {int(r): why for r, why in state["rejected"].items()}
+    eng.cancelled = {int(r): np.asarray(t, np.int32)
+                     for r, t in state["cancelled"].items()}
+    eng._deadline = {int(r): d for r, d in state["deadline"].items()}
+    eng._resume = {int(r): (list(p), list(lp))
+                   for r, (p, lp) in state["resume"].items()}
+    eng._quarantine = [(release, list(pages))
+                       for release, pages in state["quarantine"]]
+    eng.engine_steps = state["engine_steps"]
+    eng.decode_steps = state["decode_steps"]
+    eng.preemptions = state["preemptions"]
+    eng._next_id = state["next_id"]
+    eng._stall_until = state["stall_until"]
+    eng.tracker.log("serve_snapshot_restore", {
+        "engine_step": eng.engine_steps, "directory": directory})
+    return eng

@@ -1,0 +1,231 @@
+"""Chaos conformance: determinism survives injected faults (README §Robustness).
+
+The headline proof of the fault-injection PR: a matrix of seeded
+:class:`repro.faults.FaultPlan`s × engine configs where **every request
+completed under faults emits tokens bitwise equal to the fault-free run**,
+the injector's digest chain records exactly where the faults landed, and the
+robustness layer at rest (unarmed) is a bitwise no-op.
+
+The reusable matrix lives in :mod:`repro.faults.conformance` (CI runs it as a
+CLI and uploads ``chaos_conformance.json``); this file drives the same cells
+in-process plus the edge cases that want direct engine access.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import registry
+from repro.faults import (EngineCrash, Fault, FaultPlan, Injector)
+from repro.faults import conformance as CF
+from repro.models import transformer as T
+from repro.serve import ContinuousEngine, QueueFull, SampleConfig
+
+GEN = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get("stablelm-1.6b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = {i: rng.randint(1, cfg.vocab, size=n).tolist()
+               for i, n in enumerate([5, 13, 32, 7, 21, 9, 17, 3])}
+    return cfg, params, prompts
+
+
+def build(setup, *, scfg=SampleConfig(temperature=0.7, seed=11), ids=None,
+          **kw):
+    cfg, params, prompts = setup
+    eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64, page_size=8,
+                           prefill_chunk=16, scfg=scfg, **kw)
+    for i in (ids if ids is not None else sorted(prompts)):
+        eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    return build(setup).run()
+
+
+# ------------------------------------------------------------------ matrix
+def test_conformance_matrix_sampled(setup, baseline):
+    """The full matrix — every cell green, every completed request bitwise."""
+    report = CF.run_matrix(sampled=True)
+    failed = [c["cell"] for c in report["cells"] if not c["ok"]]
+    assert report["ok"], f"chaos conformance cells failed: {failed}"
+    # the report carries the evidence CI archives: plan keys + landing digests
+    for c in report["cells"]:
+        if c["plan"] is not None:
+            assert c["plan"].startswith("faultplan-v")
+        if c["faults_landed"]:
+            assert c["history_digest"]
+
+
+def test_conformance_matrix_greedy_subset(setup):
+    """Greedy sampling config: a focused subset (temperature=0 has no RNG, so
+    the interesting failure mode is schedule corruption, not key drift)."""
+    report = CF.run_matrix(sampled=False, cells=[
+        "unarmed_noop", "slot_revocation", "seeded_mix_1"])
+    assert report["ok"], report["cells"]
+
+
+def test_matrix_artifact_roundtrips(setup, tmp_path):
+    out = tmp_path / "chaos_conformance.json"
+    report = CF.run_matrix(out=str(out), cells=["unarmed_noop"])
+    import json
+    disk = json.loads(out.read_text())
+    assert disk["ok"] == report["ok"] is True
+    assert disk["baseline_tokens_sha256"] == report["baseline_tokens_sha256"]
+
+
+# ----------------------------------------------------- unarmed is a no-op
+def test_unarmed_layer_is_bitwise_noop(setup, baseline):
+    """An engine constructed with every robustness kwarg left at its default
+    matches one where the kwargs aren't even mentioned — and an armed *empty*
+    plan matches too (no fault ⇒ no behavioural change, proven bitwise)."""
+    cfg, params, prompts = setup
+    plain = ContinuousEngine(cfg, params, n_slots=4, max_seq=64, page_size=8,
+                             prefill_chunk=16,
+                             scfg=SampleConfig(temperature=0.7, seed=11))
+    for i in sorted(prompts):
+        plain.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+    got = plain.run()
+    for i in baseline:
+        np.testing.assert_array_equal(baseline[i], got[i])
+    inj = Injector(FaultPlan())
+    armed = build(setup, faults=inj).run()
+    for i in baseline:
+        np.testing.assert_array_equal(baseline[i], armed[i])
+    assert inj.history == []
+
+
+# ----------------------------------------------------- deterministic replay
+def test_fault_landing_record_replays_identically(setup):
+    """Same plan + same request stream ⇒ identical landing digest chain."""
+    plan = FaultPlan.seeded(7, steps=40, rate=0.4)
+    digs = []
+    for _ in range(2):
+        inj = Injector(plan)
+        build(setup, faults=inj).run()
+        digs.append(inj.history_digest())
+    assert digs[0] == digs[1]
+    inj = Injector(FaultPlan.seeded(8, steps=40, rate=0.4))
+    build(setup, faults=inj).run()
+    assert inj.history_digest() != digs[0]
+
+
+def test_preemption_under_arrival_order_change(setup, baseline):
+    """Faults + reversed submission order: tokens still bitwise per request
+    (the victim rule keys on request id, not submission sequence)."""
+    plan = FaultPlan(faults=(Fault(2, "revoke_slot", arg=2),
+                             Fault(5, "pool_exhaust", arg=16, duration=2)))
+    got = build(setup, faults=Injector(plan),
+                ids=list(reversed(range(8)))).run()
+    for i in baseline:
+        np.testing.assert_array_equal(baseline[i], got[i],
+                                      err_msg=f"request {i}")
+
+
+# -------------------------------------------------------- crash + snapshot
+def test_crash_restore_bitwise(setup, baseline, tmp_path):
+    """Injected crash → ``from_snapshot`` → every stream finishes bitwise;
+    the snapshot directory is manifest-v2 (digest-verified on the way in)."""
+    cfg, params, _ = setup
+    inj = Injector(FaultPlan(faults=(Fault(7, "crash"),
+                                     Fault(3, "revoke_slot", arg=1))))
+    eng = build(setup, faults=inj, snapshot_dir=str(tmp_path),
+                snapshot_every=3)
+    with pytest.raises(EngineCrash):
+        eng.run()
+    assert any(n.startswith("step_") for n in os.listdir(tmp_path))
+    eng2 = ContinuousEngine.from_snapshot(str(tmp_path), cfg, params,
+                                          faults=inj)
+    assert eng2.engine_steps <= 7
+    got = eng2.run()
+    for i in baseline:
+        np.testing.assert_array_equal(baseline[i], got[i],
+                                      err_msg=f"request {i}")
+    assert eng2.cache.free_pages == eng2.cache.layout.n_pages
+
+
+def test_snapshot_restore_rejects_wrong_config(setup, tmp_path):
+    cfg, params, _ = setup
+    eng = build(setup, ids=[0, 1])
+    eng.step()
+    eng.save_snapshot(str(tmp_path))
+    other = registry.get("stablelm-1.6b").reduced(n_layers=2)
+    with pytest.raises(ValueError, match="different model config"):
+        ContinuousEngine.from_snapshot(str(tmp_path), other, params)
+
+
+def test_snapshot_restore_detects_corruption(setup, tmp_path):
+    import glob
+    eng = build(setup, ids=[0, 1])
+    eng.step()
+    step = eng.save_snapshot(str(tmp_path))
+    npz = glob.glob(str(tmp_path / f"step_{step}" / "arrays.npz"))[0]
+    blob = bytearray(open(npz, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(npz, "wb").write(bytes(blob))
+    cfg, params, _ = setup
+    # either the manifest digest check or the zip CRC layer refuses the bytes
+    with pytest.raises(Exception):
+        ContinuousEngine.from_snapshot(str(tmp_path), cfg, params)
+
+
+def test_snapshot_unarmed_engine_unaffected(setup, baseline, tmp_path):
+    """Periodic snapshots are observation: tokens bitwise with them on."""
+    got = build(setup, snapshot_dir=str(tmp_path), snapshot_every=4).run()
+    for i in baseline:
+        np.testing.assert_array_equal(baseline[i], got[i])
+    assert any(n.startswith("step_") for n in os.listdir(tmp_path))
+
+
+# -------------------------------------------------- shedding and deadlines
+def test_load_shedding_is_deterministic(setup, baseline):
+    """The shed set depends only on (request id, queue state): two identical
+    streams shed the same requests; the admitted ones match the baseline."""
+    cfg, params, prompts = setup
+    sheds = []
+    for _ in range(2):
+        eng = build(setup, ids=[], max_queue_depth=3)
+        shed = []
+        for i in sorted(prompts):
+            try:
+                eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+            except QueueFull as e:
+                assert e.req_id == i and e.depth == 3
+                shed.append(i)
+        got = eng.run()
+        sheds.append((shed, got, dict(eng.rejected)))
+    (shed, got, rejected), (shed2, got2, _) = sheds
+    assert shed == shed2 == [3, 4, 5, 6, 7]
+    assert rejected == {i: "queue_full" for i in shed}
+    assert sorted(got) == [0, 1, 2]
+    for i in got:
+        np.testing.assert_array_equal(baseline[i], got[i])
+        np.testing.assert_array_equal(got[i], got2[i])
+
+
+def test_deadline_cancellation_frees_pages(setup, baseline):
+    """A stalled engine blows request deadlines: cancelled requests release
+    their pages immediately, survivors stay bitwise, partials are recorded."""
+    cfg, params, prompts = setup
+    inj = Injector(FaultPlan(faults=(Fault(1, "decode_stall", arg=8),)))
+    eng = build(setup, ids=[], faults=inj)
+    for i in sorted(prompts):
+        eng.submit(prompts[i], req_id=i, max_new_tokens=GEN,
+                   deadline_steps=5 if i in (1, 2) else None)
+    got = eng.run()
+    assert sorted(eng.cancelled) == [1, 2]
+    assert sorted(got) == [0, 3, 4, 5, 6, 7]
+    for i in got:
+        np.testing.assert_array_equal(baseline[i], got[i])
+    # partial progress is preserved (prefix of the fault-free stream)
+    for i in (1, 2):
+        part = eng.cancelled[i]
+        np.testing.assert_array_equal(part, baseline[i][:len(part)])
+    assert eng.cache.free_pages == eng.cache.layout.n_pages

@@ -1,0 +1,103 @@
+"""Bounded deterministic retry for transient checkpoint write IO errors.
+
+The contract (ckpt/checkpoint.py): a save retries *OSError only*, on a fixed
+schedule (``IO_RETRIES`` extra attempts, ``RETRY_BACKOFF_S * attempt``
+backoff, no jitter); each failed attempt removes its torn tmp dir; exhausted
+retries surface the original error with nothing published; non-IO errors
+never retry.  The async writer inherits all of it (same ``_write`` body).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as C
+from repro.verify import digest as D
+
+TREE = {"w": np.arange(24, dtype=np.float32).reshape(4, 6),
+        "b": np.ones(6, np.float32)}
+
+
+def _flaky_hook(fail_attempts, calls, exc=OSError):
+    """Raise for the first ``fail_attempts`` attempts of every save."""
+    def hook(*, step, attempt):
+        calls.append((step, attempt))
+        if attempt < fail_attempts:
+            raise exc(f"transient (step={step}, attempt={attempt})")
+    return hook
+
+
+@pytest.fixture(autouse=True)
+def _clean_hook():
+    assert C._IO_HOOK is None
+    yield
+    C._IO_HOOK = None
+
+
+def _no_torn_tmp(directory):
+    return not any(n.startswith(".tmp") for n in os.listdir(directory))
+
+
+def test_transient_then_success(tmp_path, monkeypatch):
+    calls = []
+    monkeypatch.setattr(C, "_IO_HOOK", _flaky_hook(C.IO_RETRIES, calls))
+    monkeypatch.setattr(C, "RETRY_BACKOFF_S", 0.0)   # keep the test fast
+    C.save(str(tmp_path), 3, TREE)
+    assert calls == [(3, a) for a in range(C.IO_RETRIES + 1)]
+    restored = C.restore(str(tmp_path), 3,
+                         {k: np.zeros_like(v) for k, v in TREE.items()})
+    assert D.tree_digest(restored) == D.tree_digest(TREE)
+    assert _no_torn_tmp(tmp_path)
+
+
+def test_exhausted_retries_surface_original_error(tmp_path, monkeypatch):
+    calls = []
+
+    class DiskGone(OSError):
+        pass
+
+    monkeypatch.setattr(C, "_IO_HOOK",
+                        _flaky_hook(C.IO_RETRIES + 10, calls, exc=DiskGone))
+    monkeypatch.setattr(C, "RETRY_BACKOFF_S", 0.0)
+    with pytest.raises(DiskGone, match="transient"):
+        C.save(str(tmp_path), 5, TREE)
+    # exactly the fixed schedule, then the original error — nothing published
+    assert calls == [(5, a) for a in range(C.IO_RETRIES + 1)]
+    assert C.available_steps(str(tmp_path)) == []
+    assert _no_torn_tmp(tmp_path)
+
+
+def test_non_oserror_is_not_retried(tmp_path, monkeypatch):
+    calls = []
+    monkeypatch.setattr(C, "_IO_HOOK", _flaky_hook(99, calls, exc=RuntimeError))
+    with pytest.raises(RuntimeError):
+        C.save(str(tmp_path), 1, TREE)
+    assert calls == [(1, 0)]                       # one attempt, no retry
+    assert _no_torn_tmp(tmp_path)
+
+
+def test_async_writer_retries_too(tmp_path, monkeypatch):
+    calls = []
+    monkeypatch.setattr(C, "_IO_HOOK", _flaky_hook(1, calls))
+    monkeypatch.setattr(C, "RETRY_BACKOFF_S", 0.0)
+    t = C.save(str(tmp_path), 7, TREE, async_=True)
+    assert isinstance(t, threading.Thread)
+    t.join()
+    assert calls == [(7, 0), (7, 1)]
+    assert C.latest_step(str(tmp_path)) == 7
+    assert _no_torn_tmp(tmp_path)
+
+
+def test_retry_preserves_digests_and_latest(tmp_path, monkeypatch):
+    """A retried save is indistinguishable from a clean one: same manifest
+    digests, and an earlier durable checkpoint is never disturbed."""
+    C.save(str(tmp_path), 1, TREE)
+    clean = C.read_manifest(str(tmp_path), 1)
+    monkeypatch.setattr(C, "_IO_HOOK", _flaky_hook(1, []))
+    monkeypatch.setattr(C, "RETRY_BACKOFF_S", 0.0)
+    C.save(str(tmp_path), 2, TREE)
+    retried = C.read_manifest(str(tmp_path), 2)
+    assert retried["tree_digest"] == clean["tree_digest"]
+    assert retried["arrays"] == clean["arrays"]
+    assert C.available_steps(str(tmp_path)) == [1, 2]

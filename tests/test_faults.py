@@ -1,0 +1,149 @@
+"""Unit tests for repro.faults plans and the injector (no model needed)."""
+import json
+
+import pytest
+
+from repro.faults import (Fault, FaultPlan, InjectedIOError, Injector,
+                          armed_checkpoint)
+from repro.faults.plan import KINDS, SITES
+
+
+# ------------------------------------------------------------------- Fault
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault(0, "meteor_strike")
+    with pytest.raises(ValueError):
+        Fault(-1, "revoke_slot")
+    with pytest.raises(ValueError):
+        Fault(0, "pool_exhaust", arg=-1)
+    with pytest.raises(ValueError):
+        Fault(0, "pool_exhaust", duration=0)
+
+
+def test_fault_sites_cover_all_kinds():
+    for k in KINDS:
+        assert Fault(0, k).site == SITES[k]
+
+
+def test_fault_roundtrip():
+    f = Fault(7, "pool_exhaust", arg=3, duration=2)
+    assert Fault.from_dict(f.to_dict()) == f
+
+
+# ---------------------------------------------------------------- FaultPlan
+def test_plan_key_is_content_addressed():
+    a = FaultPlan(faults=(Fault(1, "revoke_slot"), Fault(5, "decode_stall")))
+    # same faults, different literal order -> same canonical plan, same key
+    b = FaultPlan(faults=(Fault(5, "decode_stall"), Fault(1, "revoke_slot")))
+    assert a.key() == b.key() and a == b
+    c = FaultPlan(faults=(Fault(2, "revoke_slot"),))
+    assert a.key() != c.key()
+    assert a.key().startswith("faultplan-v")
+    # the name is a label, not content
+    assert FaultPlan(faults=a.faults, name="x").key() == a.key()
+
+
+def test_plan_json_roundtrip():
+    plan = FaultPlan.seeded(9, steps=30, rate=0.5, name="rt")
+    back = FaultPlan.from_json(plan.to_json())
+    assert back == plan and back.key() == plan.key()
+    with pytest.raises(ValueError):
+        FaultPlan.from_json(json.dumps({"version": 99, "faults": []}))
+
+
+def test_plan_is_hashable_and_sorted():
+    plan = FaultPlan(faults=(Fault(9, "revoke_slot"), Fault(2, "crash")))
+    hash(plan)                                   # usable as a dict key
+    assert [f.step for f in plan.faults] == [2, 9]
+
+
+def test_seeded_plan_deterministic():
+    a = FaultPlan.seeded(4, steps=50, rate=0.3)
+    b = FaultPlan.seeded(4, steps=50, rate=0.3)
+    assert a == b and a.key() == b.key()
+    assert FaultPlan.seeded(5, steps=50, rate=0.3) != a
+    assert all(f.step < 50 for f in a.faults)
+    assert all(f.kind in ("pool_exhaust", "revoke_slot", "decode_stall")
+               for f in a.faults)
+
+
+def test_seeded_plan_rejects_unschedulable_kinds():
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(0, steps=10, kinds=("crash",))
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(0, steps=10, kinds=("ckpt_io",))
+
+
+def test_seeded_plan_crash_at():
+    plan = FaultPlan.seeded(0, steps=20, crash_at=7)
+    crashes = [f for f in plan.faults if f.kind == "crash"]
+    assert len(crashes) == 1 and crashes[0].step == 7
+
+
+def test_plan_lookup_helpers():
+    plan = FaultPlan(faults=(Fault(3, "revoke_slot"),
+                             Fault(3, "decode_stall", arg=2),
+                             Fault(5, "ckpt_io", arg=2)))
+    assert [f.kind for f in plan.at(3)] == ["decode_stall", "revoke_slot"]
+    assert plan.at(4) == ()
+    # ckpt faults never reach the serve site
+    assert plan.at(5) == ()
+    assert plan.ckpt_failures(5) == 2 and plan.ckpt_failures(3) == 0
+    assert plan.horizon == 5 and len(plan) == 3
+
+
+def test_seeded_ckpt_plan():
+    plan = FaultPlan.seeded_ckpt(2, steps=100, every=10, rate=1.0,
+                                 max_failures=2)
+    assert len(plan) == 10
+    assert all(f.kind == "ckpt_io" and f.step % 10 == 0 for f in plan.faults)
+    assert plan == FaultPlan.seeded_ckpt(2, steps=100, every=10, rate=1.0,
+                                         max_failures=2)
+
+
+# ----------------------------------------------------------------- Injector
+def test_injector_crash_is_one_shot():
+    f = Fault(4, "crash")
+    inj = Injector(FaultPlan(faults=(f,)))
+    assert inj.consume_crash(f) is True
+    assert inj.consume_crash(f) is False         # replay after restore: no-op
+
+
+def test_injector_ckpt_attempt_schedule():
+    inj = Injector(FaultPlan(faults=(Fault(10, "ckpt_io", arg=2),)))
+    for attempt in range(2):
+        with pytest.raises(InjectedIOError):
+            inj.ckpt_attempt(10, attempt)
+    inj.ckpt_attempt(10, 2)                      # third attempt succeeds
+    inj.ckpt_attempt(11, 0)                      # untargeted step never fails
+    assert [e["attempt"] for e in inj.history] == [0, 1]
+
+
+def test_injector_history_digest_orders():
+    def run(entries):
+        inj = Injector(FaultPlan())
+        for f, info in entries:
+            inj.record(f, **info)
+        return inj.history_digest()
+
+    a = (Fault(1, "revoke_slot"), {"victims": [3]})
+    b = (Fault(2, "decode_stall"), {})
+    assert run([a, b]) == run([a, b])
+    assert run([a, b]) != run([b, a])            # the chain is order-sensitive
+    assert run([]) != run([a])
+
+
+def test_armed_checkpoint_none_is_noop():
+    from repro.ckpt import checkpoint as C
+    with armed_checkpoint(None) as got:
+        assert got is None and C._IO_HOOK is None
+
+
+def test_armed_checkpoint_restores_hook_on_error():
+    from repro.ckpt import checkpoint as C
+    inj = Injector(FaultPlan())
+    with pytest.raises(RuntimeError):
+        with armed_checkpoint(inj):
+            assert C._IO_HOOK is not None
+            raise RuntimeError("boom")
+    assert C._IO_HOOK is None

@@ -175,6 +175,84 @@ def test_paged_allocator_deterministic_lowest_id():
         c.alloc(0, 5)               # pool OOM surfaces, never silent
 
 
+# ----------------------------------------------- robustness (repro.faults PR)
+def test_submit_validation_names_the_limit(setup):
+    """Up-front submit validation: every rejection names the violated bound
+    (max_seq, n_pages) so a caller can size the request without grepping."""
+    cfg, params, _ = setup
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=32, page_size=8)
+    with pytest.raises(ValueError, match=r"max_seq=32"):
+        eng.submit(list(range(1, 30)), max_new_tokens=8)  # 29+8 > 32
+    with pytest.raises(ValueError, match=r"n_pages=4"):
+        # fits max_seq in a bigger engine but can never fit this pool
+        ContinuousEngine(cfg, params, n_slots=1, max_seq=64, page_size=8,
+                         n_pages=4).submit(list(range(1, 40)),
+                                           max_new_tokens=8)
+    with pytest.raises(ValueError, match="deadline_steps"):
+        eng.submit([1, 2], max_new_tokens=4, deadline_steps=0)
+    # failed submissions consumed no request id
+    assert eng.submit([1, 2], max_new_tokens=4) == 0
+
+
+def test_pool_exhausted_is_typed():
+    from repro.serve.kv_cache import PoolExhausted
+    cfg = registry.get("stablelm-1.6b").reduced()
+    lay = PagedLayout(page_size=8, n_pages=4, n_slots=2, max_pages_per_slot=8)
+    c = PagedKVCache(cfg, lay)
+    c.alloc(0, 3)
+    with pytest.raises(PoolExhausted) as ei:
+        c.alloc(1, 2)
+    assert (ei.value.slot, ei.value.requested, ei.value.free) == (1, 2, 1)
+    assert isinstance(ei.value, RuntimeError)    # old handlers keep working
+    # per-slot capacity overflow is a ValueError naming the bound
+    lay2 = PagedLayout(page_size=8, n_pages=8, n_slots=1, max_pages_per_slot=2)
+    c2 = PagedKVCache(cfg, lay2)
+    c2.alloc(0, 2)
+    with pytest.raises(ValueError, match="max_pages_per_slot=2"):
+        c2.alloc(0, 1)
+
+
+def test_scheduler_admit_exception_safe():
+    """If the capacity probe raises mid-round, admit() rolls back every
+    admission it made in that round: no slot leaks, no lost requests."""
+    s = FCFSScheduler(n_slots=3)
+    for rid in (1, 2, 3):
+        s.submit(Request(rid, (1, 2), 4))
+
+    calls = []
+
+    def exploding_fits(req):
+        calls.append(req.id)
+        if req.id == 2:
+            raise RuntimeError("probe blew up")
+        return True
+
+    with pytest.raises(RuntimeError, match="probe blew up"):
+        s.admit(exploding_fits)
+    assert calls == [1, 2]
+    # strong guarantee: the pre-call state is fully restored
+    assert sorted(s.pending) == [1, 2, 3] and s.active == {}
+    assert sorted(s._free_slots) == [0, 1, 2]
+    # and the scheduler still works afterwards
+    got = s.admit(lambda r: r.id != 2)
+    assert [(slot, r.id) for slot, r in got] == [(0, 1)]
+
+
+def test_pool_quarantine_roundtrip():
+    from repro.serve.kv_cache import PoolExhausted
+    cfg = registry.get("stablelm-1.6b").reduced()
+    lay = PagedLayout(page_size=8, n_pages=6, n_slots=1, max_pages_per_slot=6)
+    c = PagedKVCache(cfg, lay)
+    taken = c.quarantine(4)
+    assert taken == [0, 1, 2, 3] and c.free_pages == 2   # lowest ids first
+    with pytest.raises(PoolExhausted):
+        c.quarantine(3)
+    c.release_quarantine(taken)
+    assert c.free_pages == 6
+    c.alloc(0, 2)
+    assert c.page_table[0, :2].tolist() == [0, 1]        # heap order restored
+
+
 # ---------------------------------------------------------------- heartbeat
 def test_straggler_detection():
     m = Monitor(HeartbeatConfig(straggler_factor=2.0, warmup_steps=2))

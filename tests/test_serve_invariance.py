@@ -145,6 +145,46 @@ def test_run_to_run_bitwise(setup):
 
 
 @pytest.mark.slow
+def test_preemption_soak(setup):
+    """20 seeded FaultPlans interleave evictions, page quarantines and stalls
+    into the same request stream; every rep must reproduce the fault-free
+    tokens bitwise AND drain back to a fully-free pool (zero leaked pages,
+    empty quarantine, idle scheduler) — the preemption/restore soak for the
+    repro.faults PR."""
+    from repro.faults import FaultPlan, Injector
+    cfg, params, prompts = setup
+    scfg = SampleConfig(temperature=0.7, top_k=50, seed=3)
+    base = run(setup, list(range(8)), scfg=scfg)
+    preempted = 0
+    for rep in range(20):
+        plan = FaultPlan.seeded(100 + rep, steps=48, rate=0.35,
+                                name=f"soak-{rep}")
+        inj = Injector(plan)
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                               page_size=8, prefill_chunk=16, scfg=scfg,
+                               faults=inj)
+        for i in sorted(prompts):
+            eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+        got = eng.run()
+        assert_same(base, got, list(range(8)))
+        preempted += eng.preemptions
+        # zero-leak invariant after drain
+        assert eng.cache.free_pages == eng.cache.layout.n_pages, \
+            f"rep {rep} ({plan.key()}): leaked pages"
+        assert not eng._quarantine and eng.sched.idle
+        # replaying the same plan lands the same faults (digest chain)
+        inj2 = Injector(plan)
+        eng2 = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                                page_size=8, prefill_chunk=16, scfg=scfg,
+                                faults=inj2)
+        for i in sorted(prompts):
+            eng2.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+        eng2.run()
+        assert inj2.history_digest() == inj.history_digest(), plan.key()
+    assert preempted > 0, "soak never actually preempted anything"
+
+
+@pytest.mark.slow
 def test_streamed_arrivals_invariant(setup):
     """Requests arriving *mid-flight* (between engine steps) still get the
     same tokens as when everything is submitted up front."""
