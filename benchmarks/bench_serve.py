@@ -15,6 +15,15 @@ single-device run (the topology-invariance contract) — on a plain 1-CPU CI
 host only tp1 runs; the sharded-serve CI job forces 4 host devices to cover
 the full axis.
 
+``--spec-k`` adds the speculative-decoding axis
+(``spec_k{n}_decode_tps`` / ``spec_k{n}_accept_rate`` /
+``spec_k{n}_vs_nonspec``): self-draft greedy engines at each k, tokens
+asserted bitwise against the non-speculative run (the exact-acceptance
+contract, README §Serving).  Self-draft acceptance is 1.0 by construction,
+so the measured ratio is pure dispatch fusion — one ``lax.scan`` of k+1
+(slots, 1) steps per round instead of k+1 host round-trips; the acceptance
+bar (ISSUE 9) is >= 2x at k=4.
+
 ``--preempt-rate`` adds the robustness axis
 (``continuous_preempt{pct}_decode_tps``): deterministic slot-revocation
 faults every ``1/rate`` engine steps force preempt + recompute-restore
@@ -53,10 +62,19 @@ def main(argv=None) -> None:
                     help="also bench under revoke_slot faults at these rates "
                          "(faults per engine step, e.g. 0.05 0.15); no value "
                          "= default axis [0.05, 0.15]")
+    ap.add_argument("--spec-k", type=int, nargs="*", default=None,
+                    metavar="K",
+                    help="also bench self-draft speculative decoding at "
+                         "these draft lengths (bitwise-asserted vs the "
+                         "non-speculative run); no value = default axis "
+                         "[2, 4]")
     args = ap.parse_args(argv)
     preempt_rates = args.preempt_rate
     if preempt_rates is not None and not preempt_rates:
         preempt_rates = [0.05, 0.15]
+    spec_ks = args.spec_k
+    if spec_ks is not None and not spec_ks:
+        spec_ks = [2, 4]
 
     cfg = registry.get("stablelm-1.6b").reduced()
     params = T.init(cfg, jax.random.PRNGKey(0))
@@ -86,10 +104,11 @@ def main(argv=None) -> None:
     prompts = [rng.randint(1, cfg.vocab, size=PROMPT).tolist()
                for _ in range(N_REQ)]
 
-    def build(mesh=None, faults=None):
+    def build(mesh=None, faults=None, **kw):
         eng = ContinuousEngine(cfg, params, n_slots=SLOTS,
                                max_seq=PROMPT + GEN + 16, page_size=16,
-                               prefill_chunk=PROMPT, mesh=mesh, faults=faults)
+                               prefill_chunk=PROMPT, mesh=mesh, faults=faults,
+                               **kw)
         for i in range(N_REQ):
             eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
         return eng
@@ -128,6 +147,30 @@ def main(argv=None) -> None:
         results["cases"][f"continuous_tp{n}_decode_tps"] = tp_tps
         _row(f"serve_continuous_tp{n}", dt * 1e6 / max(1, GEN * N_REQ),
              f"{tp_tps:.0f}tok/s,bitwise")
+
+    # ---- spec axis: self-draft speculation, tokens bitwise vs. out ---------
+    if spec_ks:
+        results["spec_ks"] = spec_ks
+        for k in spec_ks:
+            build(spec_k=k).run()                       # compile the scan
+            eng = build(spec_k=k)
+            t0 = time.perf_counter()
+            out_s = eng.run()
+            dt = time.perf_counter() - t0
+            for r, v in out_s.items():
+                assert v.tolist() == base_tokens[r], (
+                    f"spec_k={k} tokens diverged from non-speculative on "
+                    f"request {r}")
+            s_tps = sum(len(v) for v in out_s.values()) / dt
+            rate = eng.spec.acceptance_rate()
+            assert rate == 1.0, f"self-draft acceptance {rate} != 1.0"
+            results["cases"][f"spec_k{k}_decode_tps"] = s_tps
+            results["cases"][f"spec_k{k}_accept_rate"] = rate
+            results["cases"][f"spec_k{k}_vs_nonspec"] = s_tps / tps
+            results["cases"][f"spec_k{k}_decode_steps"] = eng.decode_steps
+            _row(f"serve_spec_k{k}", dt * 1e6 / max(1, GEN * N_REQ),
+                 f"{s_tps:.0f}tok/s,accept={rate:.2f},"
+                 f"{s_tps / tps:.2f}x,bitwise")
 
     # ---- preemption axis: throughput vs deterministic revoke_slot rate -----
     if preempt_rates:

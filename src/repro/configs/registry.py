@@ -33,10 +33,37 @@ ALIASES = {
 }
 
 
+# Speculative-decoding drafter pairing (repro.serve.spec): for each
+# paged-servable target, the registry arch that drafts for it — the smallest
+# attention-only decoder.  ``None`` means self-draft (the target drafts for
+# itself; acceptance is 1.0 by construction).  The engine validates the one
+# hard compatibility rule at construction: drafter and target must share a
+# vocabulary (true across ``reduced()`` configs, which pin vocab=512; at full
+# scale a vocab-matched drafter checkpoint is required).
+DRAFTERS = {
+    "stablelm_1_6b": None,
+    "qwen1_5_110b": "stablelm_1_6b",
+    "nemotron_4_15b": "stablelm_1_6b",
+    "mistral_nemo_12b": "stablelm_1_6b",
+}
+
+
 def get(name: str):
     mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
     mod = importlib.import_module(f"repro.configs.{mod_name}")
     return mod.CONFIG
+
+
+def drafter_for(name: str):
+    """Canonical drafter arch name for ``name`` (aliases resolve), or None
+    for self-draft.  Raises KeyError for targets the paged serving path
+    (and therefore speculation) does not cover."""
+    canon = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if canon not in DRAFTERS:
+        raise KeyError(
+            f"{name!r} has no drafter pairing: speculative serving covers "
+            f"the paged-servable archs {sorted(DRAFTERS)}")
+    return DRAFTERS[canon]
 
 
 def all_arch_names():

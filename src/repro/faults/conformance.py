@@ -18,6 +18,9 @@ the README §Robustness contract cell by cell:
                         finishes bitwise (plus the no-snapshot-yet fallback)
   ckpt_io_retry         transient IO errors absorbed by the bounded retry;
                         restored tree digest-identical
+  spec_preempt          speculative decoding (``spec_k=4``) under slot
+                        revocations: completed requests bitwise vs the
+                        fault-free *non-speculative* baseline
   seeded_mix_*          RandomState-scheduled mixes of all serve faults
 
 Each cell records the plan's content-addressed key, the injector's landing
@@ -296,6 +299,28 @@ def cell_ckpt_io_retry(ctx, base, sampled):
     return _cell("ckpt_io_retry", plan, inj, ok, {}, detail)
 
 
+def cell_spec_preempt(ctx, base, sampled):
+    """Speculation under chaos: ``spec_k=4`` self-draft with slot revocations
+    landing between rounds — preemption interrupts draft/verify mid-request
+    and the restore recomputes through the speculative path.  Every completed
+    request must be bitwise equal to the fault-free **non-speculative**
+    baseline: the exact-acceptance contract survives preemption."""
+    from repro.faults import Fault, FaultPlan, Injector
+    plan = FaultPlan(name="spec-revoke", faults=(
+        Fault(1, "revoke_slot", arg=2), Fault(3, "revoke_slot", arg=1),
+        Fault(5, "revoke_slot", arg=3), Fault(8, "revoke_slot", arg=1)))
+    inj = Injector(plan)
+    eng = _engine(ctx, _scfg(sampled), faults=inj, spec_k=4)
+    _submit_all(eng, ctx)
+    got = eng.run()
+    bad = _bitwise(base, got, sorted(base))
+    ok = not bad and _drained(eng)
+    return _cell("spec_preempt", plan, inj, ok, got,
+                 {"mismatched": bad, "preemptions": eng.preemptions,
+                  "spec_rounds": eng.spec.rounds,
+                  "spec_acceptance": eng.spec.acceptance_rate()})
+
+
 def cell_seeded_mix(ctx, base, sampled, seed):
     from repro.faults import FaultPlan
     plan = FaultPlan.seeded(seed, steps=40, rate=0.35,
@@ -312,6 +337,7 @@ CELLS = {
     "load_shedding": cell_load_shedding,
     "engine_crash_restore": cell_engine_crash_restore,
     "ckpt_io_retry": cell_ckpt_io_retry,
+    "spec_preempt": cell_spec_preempt,
     "seeded_mix_1": lambda c, b, s: cell_seeded_mix(c, b, s, 1),
     "seeded_mix_2": lambda c, b, s: cell_seeded_mix(c, b, s, 2),
 }

@@ -24,6 +24,14 @@ cast back to the query dtype.  The same entry point serves single-token decode
 for one slot): per-row validity comes from ``q_positions`` (row *i* attends to
 logical KV positions ``<= q_positions[i]``), so causality inside a freshly
 written chunk and the decode length mask are the same code path.
+
+Speculative verification (:mod:`repro.serve.spec`) deliberately does **not**
+use a wide ``(B, k+1)`` chunk here, even though the mask semantics would
+allow it: XLA's CPU gemms pick accumulation strategies by the M dimension, so
+a multi-row matmul produces logits that drift ~1e-4 from the ``(B, 1)``
+decode shape — tokens would survive (argmax is robust) but the bitwise
+*logprob* contract would not.  Verify is instead a ``lax.scan`` of ``(B, 1)``
+steps — this kernel in its proven decode shape — fused into one dispatch.
 """
 from __future__ import annotations
 

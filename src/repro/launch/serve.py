@@ -86,6 +86,30 @@ def _mesh_from_args(args):
     return jax.sharding.Mesh(np.array(devs[:need]).reshape(shape), names)
 
 
+def _spec_kwargs(args):
+    """--spec-k/--draft-model -> ContinuousEngine speculation kwargs.
+
+    ``--draft-model self`` (the default) self-drafts; ``--draft-model auto``
+    takes the registry pairing (:data:`repro.configs.registry.DRAFTERS`);
+    any other value names a drafter arch.  Tokens are bitwise identical to
+    ``--spec-k 0`` in every case (README §Serving)."""
+    if not args.spec_k:
+        return {}
+    kw = {"spec_k": args.spec_k}
+    draft = args.draft_model
+    if draft == "auto":
+        draft = registry.drafter_for(args.arch) or "self"
+    if draft != "self":
+        dcfg = registry.get(draft)
+        if args.reduced:
+            dcfg = dcfg.reduced()
+        kw["draft_cfg"] = dcfg
+        kw["draft_params"] = T.init(dcfg, jax.random.PRNGKey(args.seed + 1))
+        print(f"drafter: {draft} (exact acceptance; tokens bitwise equal "
+              "to --spec-k 0)")
+    return kw
+
+
 def _continuous(cfg, params, args):
     page = 16
     mesh = _mesh_from_args(args)
@@ -104,7 +128,7 @@ def _continuous(cfg, params, args):
     eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_seq=max_seq,
                            page_size=page, prefill_chunk=min(32, args.prompt_len),
                            scfg=SampleConfig(seed=args.seed), mesh=mesh,
-                           faults=injector)
+                           faults=injector, **_spec_kwargs(args))
     rng = np.random.RandomState(args.seed)
     for i in range(args.requests):
         plen = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1)
@@ -117,6 +141,13 @@ def _continuous(cfg, params, args):
     print(f"continuous: {args.requests} requests / {args.slots} slots, "
           f"{total} tokens in {dt:.2f}s ({total / max(1e-9, dt):.1f} tok/s, "
           f"{eng.decode_steps} decode steps)")
+    if eng.spec is not None:
+        print(f"speculation: k={eng.spec.k} "
+              f"{'self-draft' if eng.spec.self_draft else 'separate drafter'}, "
+              f"{eng.spec.rounds} rounds, acceptance "
+              f"{eng.spec.acceptance_rate():.3f} "
+              f"({eng.spec.accepted}/{eng.spec.drafted - eng.spec.truncated} "
+              "evaluated drafts)")
     if injector is not None:
         print(f"chaos: {len(injector.history)} faults landed, "
               f"{eng.preemptions} preemptions, landing digest "
@@ -144,6 +175,15 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help='mesh shape "RxC" as (data, model), e.g. 2x2; '
                          "overrides --tp")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per round "
+                         "(--engine continuous); acceptance is exact, so "
+                         "tokens/logprobs are bitwise equal to --spec-k 0 "
+                         "(README §Serving)")
+    ap.add_argument("--draft-model", default="self",
+                    help='drafter for --spec-k: "self" (default, acceptance '
+                         '1.0 by construction), "auto" (registry pairing), '
+                         "or a registry arch name")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="arm a seeded repro.faults plan (pool exhaustion, "
                          "slot revocation, decode stalls) against the "
@@ -155,6 +195,10 @@ def main(argv=None):
         ap.error("--tp/--mesh apply to --engine continuous")
     if args.chaos is not None and args.engine != "continuous":
         ap.error("--chaos applies to --engine continuous")
+    if args.spec_k and args.engine != "continuous":
+        ap.error("--spec-k applies to --engine continuous")
+    if args.spec_k < 0:
+        ap.error("--spec-k must be >= 0")
 
     cfg = registry.get(args.arch)
     if args.reduced:

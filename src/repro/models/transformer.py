@@ -395,6 +395,13 @@ def paged_step(params, caches, tokens, positions, page_table, write_pages,
     the KV reduction order is fixed (repro.kernels.decode), so a row's logits
     are a pure function of its own (params, tokens, positions, page history).
 
+    Speculative decoding (repro.serve.spec) reuses this exact entry point in
+    its L=1 decode shape, scanned k+1 times inside one jit (draft self-feed
+    and teacher-forced verify alike).  Because each scan step writes its
+    position's K/V before attending, and steps run in ascending position
+    order, a rejected draft's stale K/V is always overwritten before any
+    later query reads it — cache self-healing with no rollback pass.
+
     Always runs under :func:`repro.dist.fold.canonical_scope`: the serve-side
     row-parallel reductions (wo, w_down) take the canonical fold form at every
     topology, so the single-device engine and every TP degree agree bitwise

@@ -8,6 +8,9 @@ batch size, prompt padding, request arrival order, or prefill chunk size.
   scheduler.py  FCFS-by-request-id admission, lowest-slot assignment, eviction
   engine.py     ``Engine`` (static-batch baseline) and ``ContinuousEngine``
                 (chunked prefill + in-flight batching over cache slots)
+  spec.py       verified speculative decoding (``spec_k``): draft-and-verify
+                with *exact* acceptance — tokens and logprobs bitwise equal
+                to the non-speculative stream, self-draft or separate drafter
   snapshot.py   full-engine snapshot/restore through the manifest-v2 digest
                 machinery (crash recovery, README §Robustness)
 
@@ -26,7 +29,8 @@ from repro.serve.engine import (ContinuousEngine, Engine, QueueFull,
 from repro.serve.kv_cache import PagedKVCache, PagedLayout, PoolExhausted
 from repro.serve.scheduler import FCFSScheduler, Request
 from repro.serve.snapshot import restore_engine, save_engine_snapshot
+from repro.serve.spec import Speculator
 
 __all__ = ["ContinuousEngine", "Engine", "SampleConfig", "QueueFull",
            "PagedKVCache", "PagedLayout", "PoolExhausted", "FCFSScheduler",
-           "Request", "save_engine_snapshot", "restore_engine"]
+           "Request", "save_engine_snapshot", "restore_engine", "Speculator"]

@@ -75,6 +75,16 @@ class QueueFull(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class SampleConfig:
+    """Pinned sampling semantics (README §Serving).
+
+    ``temperature == 0`` is greedy: argmax over the raw logits, and the
+    reported logprob is ``log_softmax(raw logits)[tok]`` — the *raw-softmax*
+    probability, untouched by ``top_k`` (there is no truncated distribution
+    to report under greedy).  ``temperature > 0`` samples from the
+    transformed distribution (temperature then top-k) and reports
+    ``log_softmax(transformed logits)[tok]``.  ``top_k`` keeps **exactly k**
+    tokens: ties at the k-th logit break deterministically toward the lowest
+    token id (see :func:`_transform_logits`)."""
     temperature: float = 0.0      # 0 = greedy
     top_k: int = 0                # 0 = no truncation
     seed: int = 0
@@ -84,12 +94,50 @@ class SampleConfig:
 def _transform_logits(logits, scfg: SampleConfig):
     """Temperature/top-k transform over the last (vocab) axis — shared by the
     static batched sampler and the continuous per-row sampler so the two
-    engines always sample from the same distribution for one SampleConfig."""
+    engines always sample from the same distribution for one SampleConfig.
+
+    top-k keeps **exactly k** tokens.  A threshold test (``logits < kth``)
+    would keep every token tied at the k-th value — the support would then
+    depend on how many ties the layout happens to have, violating the
+    pinned-distribution contract speculative verification relies on.  The
+    keep-set is instead the index set ``lax.top_k`` returns, which breaks
+    ties deterministically toward the **lowest token id**."""
     logits = logits / scfg.temperature
     if scfg.top_k:
-        kth = jax.lax.top_k(logits, scfg.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        _, idx = jax.lax.top_k(logits, scfg.top_k)
+        iota = jnp.arange(logits.shape[-1], dtype=idx.dtype)
+        keep = jnp.any(idx[..., :, None] == iota, axis=-2)
+        logits = jnp.where(keep, logits, -1e30)
     return logits
+
+
+def _sample_rows(logits, req_ids, steps, scfg: SampleConfig):
+    """Keyed per-row sampler core: ``(B, V) logits -> (tokens (B,), logprobs
+    (B,))`` with key ``fold_in(fold_in(key(seed), request_id), token_index)``
+    per row.  This is *the* sampling rule of the continuous engine — the
+    standalone jitted sampler (:func:`_sampler_fn`) and the in-scan sampler of
+    the speculative round (:mod:`repro.serve.spec`) both trace exactly this
+    function, so speculative acceptance ("draft == the keyed sample") compares
+    like with like.
+
+    Logprob contract (pinned; asserted in tests/test_serve_invariance.py):
+    greedy reports ``log_softmax(raw logits)[tok]``; sampled reports
+    ``log_softmax(transformed logits)[tok]``."""
+    logits = logits.astype(jnp.float32)
+    if scfg.temperature == 0.0:
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                                 tok[:, None], axis=-1)[:, 0]
+        return tok, lp
+    base = jax.random.PRNGKey(scfg.seed)
+
+    def one(row, rid, t):
+        k = jax.random.fold_in(jax.random.fold_in(base, rid), t)
+        tl = _transform_logits(row, scfg)
+        tok = jax.random.categorical(k, tl).astype(jnp.int32)
+        return tok, jax.nn.log_softmax(tl)[tok]
+
+    return jax.vmap(one)(logits, req_ids, steps)
 
 
 def _sample(logits, scfg: SampleConfig, step_key):
@@ -106,7 +154,8 @@ class Engine:
 
     def __init__(self, cfg, params, max_seq: int, scfg: SampleConfig = SampleConfig()):
         self.cfg, self.params, self.max_seq, self.scfg = cfg, params, max_seq, scfg
-        self.last_decode_steps = 0
+        self.last_decode_steps = 0        # poll-every-step reference count
+        self.dispatched_decode_steps = 0  # decodes actually dispatched
         self._prefill = jax.jit(
             lambda p, b: T.prefill_step(p, b, cfg, max_seq=max_seq))
         self._decode = jax.jit(
@@ -114,7 +163,13 @@ class Engine:
 
     def generate(self, batch, n_tokens: int):
         """batch: dict with 'tokens' (B, S_prompt) (+ frontend inputs).
-        Returns (B, n_tokens) int32, deterministic for a fixed seed."""
+        Returns (B, n_tokens) int32, deterministic for a fixed seed.
+
+        ``last_decode_steps`` afterwards is a pure function of the emitted
+        stream — the decode count a poll-every-step loop would execute — so
+        it is bitwise identical whether or not the amortized all-EOS fast
+        path fired; ``dispatched_decode_steps`` counts the decodes this call
+        actually dispatched (≤ 7 more, up to the next poll boundary)."""
         logits, caches, cross_x = self._prefill(self.params, batch)
         key = jax.random.PRNGKey(self.scfg.seed)
         tok = _sample(logits, self.scfg, jax.random.fold_in(key, 0))
@@ -123,7 +178,7 @@ class Engine:
             prompt_len += self.cfg.frontend_len
         out = [tok]
         done = jnp.zeros((tok.shape[0], 1), bool)
-        self.last_decode_steps = 0
+        self.dispatched_decode_steps = 0
         for i in range(1, n_tokens):
             if self.scfg.eos_id is not None:
                 done = done | (tok == self.scfg.eos_id)
@@ -131,19 +186,36 @@ class Engine:
                 # every 8 steps instead of serializing every dispatch on it.
                 if i % 8 == 0 and bool(jnp.all(done)):
                     # all rows finished: the remaining tokens are forced to
-                    # eos anyway — emit them host-side and skip the decodes.
-                    out.append(jnp.full((tok.shape[0], n_tokens - i),
-                                        self.scfg.eos_id, jnp.int32))
+                    # eos anyway — emit them host-side and skip the decodes,
+                    # keeping tok/done consistent with the per-step loop
+                    # (every remaining position is eos and every row done).
+                    tail = jnp.full((tok.shape[0], n_tokens - i),
+                                    self.scfg.eos_id, jnp.int32)
+                    out.append(tail)
+                    tok = tail[:, -1:]
                     break
             logits, caches = self._decode(self.params, caches, tok,
                                           jnp.asarray(prompt_len + i - 1), cross_x)
-            self.last_decode_steps += 1
+            self.dispatched_decode_steps += 1
             nxt = _sample(logits, self.scfg, jax.random.fold_in(key, i))
             if self.scfg.eos_id is not None:
                 nxt = jnp.where(done, self.scfg.eos_id, nxt)
             out.append(nxt)
             tok = nxt
-        return jnp.concatenate(out, axis=1)
+        gen = jnp.concatenate(out, axis=1)
+        # stream-pure accounting: the poll-every-step loop stops decoding at
+        # max over rows of the first-eos index (n_tokens-1 if a row never
+        # emits eos) — recompute that from the stream instead of counting
+        # dispatches, so the fast path can never skew the telemetry.
+        if self.scfg.eos_id is None:
+            self.last_decode_steps = n_tokens - 1
+        else:
+            g = np.asarray(gen)
+            is_eos = g == self.scfg.eos_id
+            first = np.where(is_eos.any(axis=1), is_eos.argmax(axis=1),
+                             n_tokens - 1)
+            self.last_decode_steps = int(first.max()) if first.size else 0
+        return gen
 
 
 # --------------------------------------------------------------------------- #
@@ -164,28 +236,12 @@ def _sampler_fn(scfg: SampleConfig):
     is the fixed-order paged attention reduction).
 
     Returns ``(tokens (B,), logprobs (B,))``: the log-probability of the
-    chosen token under the distribution it was drawn from (post temperature /
-    top-k; raw softmax for greedy) — part of the topology-invariance contract,
-    so the mesh-axis tests can assert sampled logprobs bitwise too."""
-    base = jax.random.PRNGKey(scfg.seed)
-
-    def sample(logits, req_ids, steps):          # (B, V), (B,), (B,) -> (B,)²
-        logits = logits.astype(jnp.float32)
-        if scfg.temperature == 0.0:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            lp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
-                                     tok[:, None], axis=-1)[:, 0]
-            return tok, lp
-
-        def one(row, rid, t):
-            k = jax.random.fold_in(jax.random.fold_in(base, rid), t)
-            tl = _transform_logits(row, scfg)
-            tok = jax.random.categorical(k, tl).astype(jnp.int32)
-            return tok, jax.nn.log_softmax(tl)[tok]
-
-        return jax.vmap(one)(logits, req_ids, steps)
-
-    return jax.jit(sample)
+    chosen token under the distribution it was drawn from (sampled reports
+    the post-temperature/top-k softmax; greedy reports the **raw** softmax —
+    the pinned contract on :func:`_sample_rows`) — part of the
+    topology-invariance contract, so the mesh-axis tests can assert sampled
+    logprobs bitwise too."""
+    return jax.jit(functools.partial(_sample_rows, scfg=scfg))
 
 
 @dataclasses.dataclass
@@ -211,7 +267,8 @@ class ContinuousEngine:
                  tracker=None, mesh=None, capture_prefill_logits: bool = False,
                  faults=None, max_queue_depth: Optional[int] = None,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: Optional[int] = None):
+                 snapshot_every: Optional[int] = None,
+                 spec_k: int = 0, draft_cfg=None, draft_params=None):
         """``mesh``: optional :class:`jax.sharding.Mesh` with a ``"model"``
         axis — the jitted step becomes the TP-sharded shard_map step
         (:mod:`repro.serve.sharded`); tokens/logprobs are bitwise identical
@@ -229,6 +286,15 @@ class ContinuousEngine:
         ``snapshot_every``: persist a full engine snapshot every N engine
         steps (manifest-v2 digests, :mod:`repro.serve.snapshot`) so
         :meth:`from_snapshot` can resume after a crash.
+
+        Speculative decoding (README §Serving, :mod:`repro.serve.spec`):
+        ``spec_k >= 1`` drafts ``spec_k`` tokens per live slot per engine
+        step and verifies them with exact acceptance, so the committed
+        tokens *and logprobs* stay bitwise identical to ``spec_k=0`` —
+        speculation is a pure throughput knob, composable with every other
+        contract (co-batch, mesh, chaos, snapshot).  ``draft_params`` (with
+        optional ``draft_cfg``, same vocab) selects a separate drafter;
+        ``None`` self-drafts with the target itself (acceptance 1.0).
         """
         assert T.supports_paged(cfg), (
             "paged serving covers decoder-only, attention-only LMs")
@@ -294,6 +360,14 @@ class ContinuousEngine:
 
             self._step = step
         self._sampler = _sampler_fn(scfg)
+
+        self.spec = None
+        if spec_k:
+            from repro.serve.spec import Speculator
+            self.spec = Speculator(self, spec_k, draft_cfg=draft_cfg,
+                                   draft_params=draft_params)
+        elif draft_params is not None or draft_cfg is not None:
+            raise ValueError("draft_cfg/draft_params require spec_k >= 1")
 
     # ------------------------------------------------------------ request API
     def submit(self, tokens, *, req_id: Optional[int] = None,
@@ -434,6 +508,11 @@ class ContinuousEngine:
             prefix = np.asarray(list(req.tokens) + list(produced[:-1]),
                                 np.int32)
             self._chunked_prefill(slot, prefix)
+            if self.spec is not None:
+                # the drafter's KV over the same prefix, recomputed the same
+                # way — so post-restore drafts (and hence round boundaries)
+                # replay bitwise (no-op for self-draft: shared pools)
+                self.spec.prefill(self, slot, prefix)
             self._slots[slot] = st = _Active(req, list(produced), list(lps))
             self.tracker.log("serve_restore", {
                 "request_id": req.id, "slot": slot,
@@ -444,6 +523,8 @@ class ContinuousEngine:
         rows = [] if self._capture else None
         logits = self._chunked_prefill(slot, np.asarray(req.tokens, np.int32),
                                        rows)
+        if self.spec is not None:
+            self.spec.prefill(self, slot, np.asarray(req.tokens, np.int32))
         if self._capture:
             self.prefill_logits[req.id] = np.concatenate(rows, axis=0)
         first, first_lp = self._sampler(logits[:, (plen - 1) % C],
@@ -573,7 +654,12 @@ class ContinuousEngine:
         stalled = step_idx < self._stall_until
         live = ([] if stalled
                 else [s for s, st in self._slots.items() if not st.done])
-        if live:
+        if live and self.spec is not None:
+            # speculative round: draft spec_k, verify, commit the accepted
+            # prefix — up to spec_k+1 tokens per slot per engine step, every
+            # one bitwise identical to the plain path (repro.serve.spec)
+            self.spec.round(self, live)
+        elif live:
             lay = self.cache.layout
             n = lay.n_slots
             toks = np.zeros((n, 1), np.int32)
@@ -635,10 +721,16 @@ class ContinuousEngine:
     @classmethod
     def from_snapshot(cls, directory: str, cfg, params, *,
                       step: Optional[int] = None, faults=None, tracker=None,
-                      mesh=None) -> "ContinuousEngine":
+                      mesh=None, draft_cfg=None,
+                      draft_params=None) -> "ContinuousEngine":
         """Rebuild an engine from a snapshot (latest by default) and resume:
         every stream that was in flight completes bitwise identically to an
-        uncrashed run (README §Robustness)."""
+        uncrashed run (README §Robustness).  A snapshot taken with a
+        separate drafter requires ``draft_params`` (and ``draft_cfg`` if one
+        was supplied originally) — drafter params are never serialized, like
+        target params; the drafter's KV pools *are* in the snapshot."""
         from repro.serve import snapshot as SN
         return SN.restore_engine(directory, cfg, params, step=step,
-                                 faults=faults, tracker=tracker, mesh=mesh)
+                                 faults=faults, tracker=tracker, mesh=mesh,
+                                 draft_cfg=draft_cfg,
+                                 draft_params=draft_params)

@@ -66,7 +66,30 @@ class PagedLayout:
         return self.n_pages
 
     def pages_for(self, n_tokens: int) -> int:
+        """Worst-case page count for ``n_tokens`` positions.
+
+        This bound also covers speculative decoding (``spec_k >= 1``,
+        :mod:`repro.serve.spec`) with **no extra reservation**: a spec round
+        clamps each slot's draft length to ``min(spec_k, remaining - 1)``,
+        so the highest position any draft or verify step writes is
+        ``prompt_len + max_new - 2`` — strictly inside the
+        ``pages_for(prompt_len + max_new)`` pages admission reserved.
+        Rejected drafts never need their pages "freed": their K/V lives
+        inside the same reservation and is deterministically overwritten by
+        the next round before any query reads it (write-then-attend, in
+        ascending position order)."""
         return -(-n_tokens // self.page_size)
+
+    def check_spec_write(self, prompt_len: int, max_new: int,
+                         position: int) -> None:
+        """Defensive bound for speculative writes: a draft/verify K/V write
+        must stay inside the slot's admission-time reservation."""
+        if position > prompt_len + max_new - 2:
+            raise ValueError(
+                f"speculative write at position {position} exceeds the "
+                f"reserved worst case {prompt_len + max_new - 2} "
+                f"(prompt {prompt_len} + max_new {max_new}); the per-slot "
+                "draft clamp is broken")
 
 
 class PagedKVCache:

@@ -9,7 +9,13 @@ submitted requests and the step at which each arrived).  Ordering rules
   2. *Admission condition*: a request is admitted only when a slot is free AND
      the page pool can cover its worst case (``ceil((prompt+max_new)/page)``
      pages, reserved up front) — no mid-flight OOM, so eviction never has to
-     preempt a running request.
+     preempt a running request.  The same reservation covers speculative
+     decoding (``spec_k`` tokens drafted + 1 verified per step,
+     :mod:`repro.serve.spec`): the engine clamps each slot's draft length to
+     ``min(spec_k, remaining - 1)``, so no speculative K/V write ever lands
+     past position ``prompt+max_new-2`` — admission needs no spec-aware
+     surcharge, and rejected drafts reclaim by deterministic overwrite
+     rather than page churn.
   3. *Slot assignment*: the lowest-numbered free slot.
   4. *Eviction*: a finished request releases its slot and pages at the end of
      the step in which it finished; freed resources are reusable at the next

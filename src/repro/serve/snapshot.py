@@ -3,7 +3,8 @@
 A snapshot is the *complete* deterministic state of a
 :class:`~repro.serve.engine.ContinuousEngine` at an engine-step boundary:
 
-  * the device KV pools (the only device state), and
+  * the device KV pools (plus the drafter's pools when a separate-drafter
+    speculative engine is snapshotted — the only device state), and
   * one host blob — scheduler queues, page tables + free heap, per-slot
     decode state (emitted tokens, their sampled logprobs, the per-request
     sampling key inputs are just ``(scfg.seed, request_id, token_index)`` so
@@ -38,7 +39,8 @@ from repro.models import transformer as T
 from repro.serve.scheduler import Request
 from repro.verify import digest as D
 
-SNAPSHOT_FORMAT = 1
+SNAPSHOT_FORMAT = 2        # v2: speculative-decoding state (spec block in the
+#                            host blob + optional drafter KV pools leaf)
 
 
 def _cfg_key(cfg) -> str:
@@ -88,6 +90,19 @@ def _host_state(eng) -> Dict:
         "page_table": eng.cache.page_table.tolist(),
         "pages_held": eng.cache.pages_held.tolist(),
         "free_pages": sorted(eng.cache._free),
+        # speculative-decoding state: geometry + acceptance telemetry; the
+        # drafter's KV pools (separate drafter only) ride as array leaves
+        "spec": None if eng.spec is None else {
+            "k": eng.spec.k,
+            "self_draft": eng.spec.self_draft,
+            "draft_cfg_key": (None if eng.spec.self_draft
+                              else _cfg_key(eng.spec.dcfg)),
+            "rounds": eng.spec.rounds,
+            "drafted": eng.spec.drafted,
+            "accepted": eng.spec.accepted,
+            "truncated": eng.spec.truncated,
+            "draft_steps": eng.spec.draft_steps,
+        },
     }
 
 
@@ -97,6 +112,8 @@ def save_engine_snapshot(eng, directory: str) -> int:
                       separators=(",", ":")).encode()
     tree = {"host": np.frombuffer(blob, np.uint8),
             "pools": eng.cache.pools}
+    if eng.spec is not None and not eng.spec.self_draft:
+        tree["draft_pools"] = eng.spec.pools
     step = eng.engine_steps
     C.save(directory, step, tree, keep_last=3)
     eng.tracker.log("serve_snapshot", {"engine_step": step,
@@ -129,12 +146,32 @@ def load_engine_snapshot(directory: str, step: Optional[int] = None):
     return state, raw, manifest
 
 
+def _restore_pools(ref, raw, manifest, prefix: str):
+    """Digest-verified pool pytree restore (storage → original dtype)."""
+    flat = jax.tree_util.tree_flatten_with_path(ref)[0]
+    restored = []
+    for path, leaf in flat:
+        key = prefix + "/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        entry = manifest["arrays"][key]
+        host = raw[key].astype(np.dtype(leaf.dtype))
+        if D.leaf_digest(host) != entry["digest"]:
+            raise ValueError(f"snapshot digest mismatch for '{key}' — "
+                             "corrupted or lossy round trip")
+        restored.append(jnp.asarray(host))
+    return jax.tree.unflatten(jax.tree.structure(ref), restored)
+
+
 def restore_engine(directory: str, cfg, params, *, step: Optional[int] = None,
-                   faults=None, tracker=None, mesh=None):
+                   faults=None, tracker=None, mesh=None, draft_cfg=None,
+                   draft_params=None):
     """Rebuild a :class:`ContinuousEngine` from a snapshot and hand it back
     ready to ``run()`` — geometry and sampling config come from the snapshot,
     so the caller only re-supplies what was never serialized (params, mesh,
-    an injector).  Every array leaf is digest-verified on the way in."""
+    an injector, drafter params).  Every array leaf is digest-verified on
+    the way in.  Speculation state (spec_k, drafter pools, acceptance
+    telemetry) restores with everything else, so a resumed speculative
+    engine replays the same rounds bitwise."""
     from repro.serve.engine import ContinuousEngine, SampleConfig, _Active
 
     state, raw, manifest = load_engine_snapshot(directory, step)
@@ -144,28 +181,44 @@ def restore_engine(directory: str, cfg, params, *, step: Optional[int] = None,
             f"({state['cfg_key']} != {_cfg_key(cfg)}) — params/cfg must match "
             "the crashed engine's")
     g = state["geometry"]
+    spec_state = state.get("spec")
+    spec_kw = {}
+    if spec_state is not None:
+        spec_kw["spec_k"] = spec_state["k"]
+        if not spec_state["self_draft"]:
+            if draft_params is None:
+                raise ValueError(
+                    "snapshot was taken with a separate drafter: pass "
+                    "draft_params (and draft_cfg if one was used) to restore")
+            dcfg = draft_cfg or cfg
+            if _cfg_key(dcfg) != spec_state["draft_cfg_key"]:
+                raise ValueError(
+                    "snapshot drafter config mismatch "
+                    f"({spec_state['draft_cfg_key']} != {_cfg_key(dcfg)})")
+            spec_kw["draft_cfg"] = draft_cfg
+            spec_kw["draft_params"] = draft_params
     eng = ContinuousEngine(
         cfg, params, n_slots=g["n_slots"], max_seq=g["max_seq"],
         page_size=g["page_size"], n_pages=g["n_pages"],
         prefill_chunk=g["prefill_chunk"], scfg=SampleConfig(**state["scfg"]),
         tracker=tracker, mesh=mesh, faults=faults,
         max_queue_depth=g["max_queue_depth"], snapshot_dir=directory,
-        snapshot_every=g["snapshot_every"])
+        snapshot_every=g["snapshot_every"], **spec_kw)
 
     # ---- device pools: storage dtype -> original dtype, digest re-verified
     ref = T.init_paged_cache(cfg, g["n_pages"] + 1, g["page_size"])
-    flat = jax.tree_util.tree_flatten_with_path(ref)[0]
-    restored = []
-    for path, leaf in flat:
-        key = "pools/" + "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        entry = manifest["arrays"][key]
-        host = raw[key].astype(np.dtype(leaf.dtype))
-        if D.leaf_digest(host) != entry["digest"]:
-            raise ValueError(f"snapshot digest mismatch for '{key}' — "
-                             "corrupted or lossy round trip")
-        restored.append(jnp.asarray(host))
-    eng.cache.pools = jax.tree.unflatten(jax.tree.structure(ref), restored)
+    eng.cache.pools = _restore_pools(ref, raw, manifest, "pools")
+    if spec_state is not None:
+        eng.spec.rounds = spec_state["rounds"]
+        eng.spec.drafted = spec_state["drafted"]
+        eng.spec.accepted = spec_state["accepted"]
+        eng.spec.truncated = spec_state["truncated"]
+        eng.spec.draft_steps = spec_state["draft_steps"]
+        if not spec_state["self_draft"]:
+            dref = T.init_paged_cache(draft_cfg or cfg, g["n_pages"] + 1,
+                                      g["page_size"])
+            eng.spec.pools = _restore_pools(dref, raw, manifest,
+                                            "draft_pools")
 
     # ---- host state: allocator, scheduler, per-slot decode state, counters
     lay = eng.cache.layout

@@ -11,7 +11,8 @@ from repro.configs.base import InputShape
 from repro.launch.heartbeat import HeartbeatConfig, Monitor
 from repro.launch.specs import make_batch
 from repro.models import transformer as T
-from repro.serve.engine import ContinuousEngine, Engine, SampleConfig
+from repro.serve.engine import (ContinuousEngine, Engine, SampleConfig,
+                                _sample, _transform_logits)
 from repro.serve.kv_cache import PagedKVCache, PagedLayout
 from repro.serve.scheduler import FCFSScheduler, Request
 
@@ -75,6 +76,65 @@ def test_eos_all_done_early_exit(setup):
     np.testing.assert_array_equal(b[0, :k + 1], a[0, :k + 1])
     assert (b[0, k:] == eos).all()           # once EOS, always EOS (bitwise)
     assert eng.last_decode_steps < 15, "early exit did not shrink the loop"
+
+
+def test_top_k_keeps_exactly_k_lowest_id_ties():
+    """Regression: with ties straddling the k-th value, exactly k tokens must
+    survive and the tie must break toward the lowest token id.  The old
+    threshold test (``logits < kth``) kept *every* token tied at the k-th
+    value, making the sampling support depend on tie layout."""
+    scfg = SampleConfig(temperature=1.0, top_k=4)
+    logits = jnp.asarray([[0.0, 5.0, 5.0, 5.0, 5.0, 5.0, 1.0, 2.0]])
+    out = np.asarray(_transform_logits(logits, scfg))
+    kept = np.where(out[0] > -1e29)[0]
+    assert kept.tolist() == [1, 2, 3, 4], kept   # ids 1..5 tie; lowest 4 win
+    np.testing.assert_array_equal(out[0, kept], 5.0)  # values untouched
+
+
+def _poll_every_step(eng, batch, n_tokens):
+    """Reference stream: the static engine's loop with the all-done probe
+    taken at *every* step (no amortized fast path).  Returns (tokens, number
+    of decode dispatches the per-step loop executed)."""
+    logits, caches, cross_x = eng._prefill(eng.params, batch)
+    key = jax.random.PRNGKey(eng.scfg.seed)
+    tok = _sample(logits, eng.scfg, jax.random.fold_in(key, 0))
+    prompt_len = batch["tokens"].shape[1]
+    out, steps = [tok], 0
+    done = jnp.zeros((tok.shape[0], 1), bool)
+    for i in range(1, n_tokens):
+        done = done | (tok == eng.scfg.eos_id)
+        if bool(jnp.all(done)):
+            out.append(jnp.full((tok.shape[0], n_tokens - i),
+                                eng.scfg.eos_id, jnp.int32))
+            break
+        logits, caches = eng._decode(eng.params, caches, tok,
+                                     jnp.asarray(prompt_len + i - 1), cross_x)
+        steps += 1
+        nxt = _sample(logits, eng.scfg, jax.random.fold_in(key, i))
+        nxt = jnp.where(done, eng.scfg.eos_id, nxt)
+        out.append(nxt)
+        tok = nxt
+    return np.asarray(jnp.concatenate(out, axis=1)), steps
+
+
+def test_static_fast_path_bitwise_vs_poll_every_step(setup):
+    """The amortized all-EOS fast path must be invisible: tokens bitwise equal
+    to the poll-every-step reference, and ``last_decode_steps`` equal to the
+    decode count that reference actually executed (regression for the old
+    dispatch-counting accounting, which depended on the poll boundary)."""
+    cfg, params, _ = setup
+    batch = make_batch(cfg, InputShape("p", "prefill", 16, 2),
+                       jax.random.PRNGKey(3))["batch"]
+    free = Engine(cfg, params, max_seq=64)
+    a = np.asarray(free.generate(batch, 24))
+    eos = int(a[0, 1])                       # row 0 emits this early
+    eng = Engine(cfg, params, max_seq=64, scfg=SampleConfig(eos_id=eos))
+    got = np.asarray(eng.generate(batch, 24))
+    ref, ref_steps = _poll_every_step(eng, batch, 24)
+    np.testing.assert_array_equal(got, ref)
+    assert eng.last_decode_steps == ref_steps
+    assert eng.dispatched_decode_steps >= ref_steps  # ≤ next poll boundary
+    assert eng.dispatched_decode_steps <= ref_steps + 7
 
 
 # ------------------------------------------------------- continuous batching

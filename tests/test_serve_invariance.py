@@ -126,6 +126,38 @@ def test_sampled_invariance(setup):
     assert any(not np.array_equal(full[i], other[i]) for i in range(4))
 
 
+def test_logprob_contract_pinned(setup):
+    """The SampleConfig logprob contract, asserted sharply:
+
+    * greedy reports ``log_softmax(raw logits)[argmax]`` — ``top_k`` must
+      NOT leak into greedy logprobs (temperature 0 skips the transform);
+    * sampled reports ``log_softmax(transformed logits)[tok]`` — with
+      ``top_k=1`` the transformed distribution is a point mass, so every
+      reported logprob is exactly 0.0 (and the token is the argmax).
+    """
+    cfg, params, prompts = setup
+
+    def lps(scfg, ids=(0, 1)):
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                               page_size=8, prefill_chunk=16, scfg=scfg)
+        for i in ids:
+            eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+        return eng.run(), eng.result_logprobs
+
+    g_tok, g_lp = lps(SampleConfig())
+    gk_tok, gk_lp = lps(SampleConfig(top_k=1))       # top_k with temp 0
+    for i in (0, 1):
+        np.testing.assert_array_equal(g_tok[i], gk_tok[i])
+        np.testing.assert_array_equal(g_lp[i], gk_lp[i])   # top_k leaked?
+        assert (g_lp[i] < 0.0).all(), \
+            "greedy logprobs must come from the raw softmax (never 0.0 " \
+            "over a 512-vocab), not the truncated one"
+    s_tok, s_lp = lps(SampleConfig(temperature=1.0, top_k=1, seed=5))
+    for i in (0, 1):
+        np.testing.assert_array_equal(s_tok[i], g_tok[i])  # point mass=argmax
+        np.testing.assert_array_equal(s_lp[i], np.zeros_like(s_lp[i]))
+
+
 def test_eos_finishes_request(setup):
     """EOS ends a request mid-stream; its tokens still match the no-eos prefix."""
     base = run(setup, [0, 1])
@@ -261,6 +293,28 @@ SHARDED_SCRIPT = textwrap.dedent("""
         assert same(sbase, run(cfg, params, prompts, MESHES[name], scfg)), name
         print(f"sampled {name} bitwise OK")
 
+    # speculative decoding under TP: the mesh round (sequential plain-shaped
+    # steps through the sharded step) must reproduce the single-device
+    # NON-speculative stream bitwise — self-draft and separate drafter
+    def run_spec(mesh, scfg, **kw):
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_seq=64,
+                               page_size=8, prefill_chunk=16, mesh=mesh,
+                               scfg=scfg, spec_k=2, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(p, req_id=i, max_new_tokens=8)
+        out = eng.run()
+        return (out, eng.result_logprobs), eng
+
+    for name in ("tp2", "mesh2x2"):
+        got, eng = run_spec(MESHES[name], scfg)
+        assert same(sbase, got), name
+        assert eng.spec.acceptance_rate() == 1.0, name
+        print(f"spec self-draft {name} bitwise OK")
+    got, eng = run_spec(MESHES["tp2"], scfg, draft_cfg=cfg,
+                        draft_params=T.init(cfg, jax.random.PRNGKey(99)))
+    assert same(sbase, got)
+    print("spec separate-drafter tp2 bitwise OK")
+
     # GQA under TP: kv heads sharded (tp | n_kv_heads) AND the replicated-pool
     # fallback (tp=4 over 2 kv heads -> every rank holds the full pool and
     # dynamic-slices its group's kv span)
@@ -368,6 +422,16 @@ def test_sampled_logprobs_invariant_to_topology(sharded_out):
     TP degrees and mesh shapes."""
     for name in ("tp2", "tp4", "mesh2x2"):
         assert f"sampled {name} bitwise OK" in sharded_out
+
+
+def test_spec_under_mesh(sharded_out):
+    """Speculation under TP (the sequential mesh-fallback round): self-draft
+    on (2,) and (2,2) meshes and a separate drafter on tp2, all bitwise vs
+    the plain single-device non-speculative stream."""
+    for m in ("spec self-draft tp2 bitwise OK",
+              "spec self-draft mesh2x2 bitwise OK",
+              "spec separate-drafter tp2 bitwise OK"):
+        assert m in sharded_out
 
 
 def test_gqa_under_tp(sharded_out):

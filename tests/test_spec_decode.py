@@ -1,0 +1,225 @@
+"""Verified speculative decoding (repro.serve.spec): exactness suite.
+
+The contract (README §Serving): with ``spec_k >= 1`` the continuous engine's
+emitted tokens **and logprobs** are bitwise identical to the non-speculative
+stream — self-draft or separate drafter, greedy or seeded sampling, GQA or
+MHA, through EOS truncation, co-batch changes, preemption chaos, and
+snapshot/restore.  Every assertion is ``assert_array_equal``; no tolerances.
+
+Speculation changes *throughput accounting only*: a round commits up to
+``k+1`` tokens per slot in one fused dispatch, so ``decode_steps`` shrinks
+while the streams stay untouched.
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serve.engine import ContinuousEngine, SampleConfig
+
+GEN = 10
+PROMPT_LENS = [5, 13, 32, 7, 21, 9]
+SCFGS = {
+    "greedy": SampleConfig(),
+    "seeded": SampleConfig(temperature=0.8, top_k=20, seed=11),
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get("stablelm-1.6b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = {i: rng.randint(1, cfg.vocab, size=n).tolist()
+               for i, n in enumerate(PROMPT_LENS)}
+    return cfg, params, prompts
+
+
+def make_engine(cfg, params, scfg, **kw):
+    return ContinuousEngine(cfg, params, n_slots=3, max_seq=64, page_size=8,
+                            prefill_chunk=16, scfg=scfg, **kw)
+
+
+def run(cfg, params, prompts, scfg, ids=None, gen=GEN, **kw):
+    eng = make_engine(cfg, params, scfg, **kw)
+    for i in (ids if ids is not None else sorted(prompts)):
+        eng.submit(prompts[i], req_id=i, max_new_tokens=gen)
+    return eng, eng.run()
+
+
+def assert_streams_equal(base_eng, base, spec_eng, got):
+    """Tokens AND logprobs bitwise, every request."""
+    assert sorted(base) == sorted(got)
+    for i in sorted(base):
+        np.testing.assert_array_equal(base[i], got[i],
+                                      err_msg=f"request {i} tokens")
+        np.testing.assert_array_equal(base_eng.result_logprobs[i],
+                                      spec_eng.result_logprobs[i],
+                                      err_msg=f"request {i} logprobs")
+
+
+@pytest.fixture(scope="module")
+def baselines(setup):
+    """Non-speculative reference streams, one per sampling mode."""
+    cfg, params, prompts = setup
+    return {name: run(cfg, params, prompts, scfg)
+            for name, scfg in SCFGS.items()}
+
+
+@pytest.mark.parametrize("mode", sorted(SCFGS))
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_self_draft_bitwise(setup, baselines, k, mode):
+    """Self-draft spec ≡ plain stream (tokens + logprobs) for every k and
+    sampling mode, with structural acceptance 1.0 and fewer dispatches."""
+    cfg, params, prompts = setup
+    base_eng, base = baselines[mode]
+    eng, got = run(cfg, params, prompts, SCFGS[mode], spec_k=k)
+    assert_streams_equal(base_eng, base, eng, got)
+    assert eng.spec.rounds > 0
+    assert eng.spec.acceptance_rate() == 1.0       # self-draft: structural
+    assert eng.spec.accepted == eng.spec.drafted - eng.spec.truncated
+    if k >= 2:                                     # rounds amortize dispatches
+        assert eng.decode_steps < base_eng.decode_steps
+
+
+def test_self_draft_gqa_bitwise(setup):
+    """The scan round is bitwise through grouped-query attention too."""
+    cfg, _, prompts = setup
+    gcfg = registry.get("stablelm-1.6b").reduced(n_kv_heads=2)
+    assert gcfg.n_kv_heads < gcfg.n_heads          # really GQA
+    gparams = T.init(gcfg, jax.random.PRNGKey(0))
+    base_eng, base = run(gcfg, gparams, prompts, SCFGS["seeded"])
+    eng, got = run(gcfg, gparams, prompts, SCFGS["seeded"], spec_k=4)
+    assert_streams_equal(base_eng, base, eng, got)
+    assert eng.spec.acceptance_rate() == 1.0
+
+
+def test_separate_drafter_rejection_path_bitwise(setup, baselines):
+    """A *bad* drafter (random independent init) rejects nearly everything —
+    and the stream is still bitwise equal: acceptance only moves throughput,
+    never a token.  This is the test that the correction/rejection path (not
+    just the accept-all fast lane) reproduces the plain stream."""
+    cfg, params, prompts = setup
+    dparams = T.init(cfg, jax.random.PRNGKey(99))
+    for mode in sorted(SCFGS):
+        base_eng, base = baselines[mode]
+        eng, got = run(cfg, params, prompts, SCFGS[mode], spec_k=4,
+                       draft_cfg=cfg, draft_params=dparams)
+        assert_streams_equal(base_eng, base, eng, got)
+        assert eng.spec.drafted - eng.spec.truncated > 0
+        assert eng.spec.acceptance_rate() < 1.0, \
+            "random drafter should miss sometimes"
+        assert eng.spec.draft_steps > 0
+
+
+def test_separate_drafter_exact_copy_accepts_everything(setup, baselines):
+    """A drafter that *is* the target (same params, separate KV pools) must
+    accept 1.0 through the real teacher-forced verify path — proving the
+    drafter's chunked prefill + self-feed scan reproduce the plain samples."""
+    cfg, params, prompts = setup
+    base_eng, base = baselines["seeded"]
+    eng, got = run(cfg, params, prompts, SCFGS["seeded"], spec_k=2,
+                   draft_cfg=cfg, draft_params=params)
+    assert_streams_equal(base_eng, base, eng, got)
+    assert eng.spec.acceptance_rate() == 1.0
+    assert not eng.spec.self_draft
+
+
+def test_eos_truncation_bitwise(setup):
+    """EOS mid-round: the commit loop stops at EOS, over-drafted proposals
+    count as truncated (never evaluated), and the stream stays bitwise."""
+    cfg, params, prompts = setup
+    _, free = run(cfg, params, prompts, SCFGS["seeded"], gen=16)
+    eos = int(free[0][4])          # a token the model provably emits mid-run
+    scfg = SampleConfig(temperature=0.8, top_k=20, seed=11, eos_id=eos)
+    base_eng, base = run(cfg, params, prompts, scfg, gen=16)
+    eng, got = run(cfg, params, prompts, scfg, gen=16, spec_k=4)
+    assert_streams_equal(base_eng, base, eng, got)
+    assert any((np.asarray(v) == eos).any() for v in base.values())
+    assert len(base[0]) < 16, "request 0 should truncate at EOS"
+    assert eng.spec.acceptance_rate() == 1.0
+
+
+def test_cobatch_invariance_with_spec_on(setup):
+    """The serving contract's headline invariant, re-proven under spec: a
+    request's stream does not depend on what else is co-batched."""
+    cfg, params, prompts = setup
+    scfg = SCFGS["seeded"]
+    solo_eng, solo = run(cfg, params, prompts, scfg, ids=[2], spec_k=4)
+    both_eng, both = run(cfg, params, prompts, scfg, spec_k=4)
+    np.testing.assert_array_equal(solo[2], both[2])
+    np.testing.assert_array_equal(solo_eng.result_logprobs[2],
+                                  both_eng.result_logprobs[2])
+
+
+def test_spec_under_preemption_chaos(setup, baselines):
+    """Slot revocations land between rounds; restored requests recompute
+    through the speculative path and still finish bitwise vs the fault-free
+    non-speculative baseline."""
+    from repro.faults import Fault, FaultPlan, Injector
+    cfg, params, prompts = setup
+    base_eng, base = baselines["seeded"]
+    plan = FaultPlan(name="spec-chaos", faults=(
+        Fault(1, "revoke_slot", arg=2), Fault(3, "revoke_slot", arg=1),
+        Fault(5, "revoke_slot", arg=3)))
+    inj = Injector(plan)
+    eng, got = run(cfg, params, prompts, SCFGS["seeded"], spec_k=4,
+                   faults=inj)
+    assert_streams_equal(base_eng, base, eng, got)
+    assert eng.preemptions > 0, "plan never landed — the cell is vacuous"
+
+
+@pytest.mark.parametrize("drafter", ["self", "separate"])
+def test_snapshot_restore_mid_run_bitwise(setup, baselines, drafter):
+    """Snapshot a speculative engine mid-run, rebuild from disk, finish:
+    every stream bitwise vs the uninterrupted non-speculative baseline, and
+    spec state (k, drafter pools, telemetry) survives the round trip."""
+    from repro.serve.snapshot import save_engine_snapshot
+    cfg, params, prompts = setup
+    base_eng, base = baselines["seeded"]
+    dkw = ({} if drafter == "self"
+           else dict(draft_cfg=cfg, draft_params=T.init(
+               cfg, jax.random.PRNGKey(99))))
+    eng = make_engine(cfg, params, SCFGS["seeded"], spec_k=2, **dkw)
+    for i in sorted(prompts):
+        eng.submit(prompts[i], req_id=i, max_new_tokens=GEN)
+    for _ in range(5):
+        eng.step()
+    with tempfile.TemporaryDirectory() as d:
+        save_engine_snapshot(eng, d)
+        eng2 = ContinuousEngine.from_snapshot(
+            d, cfg, params,
+            **({} if drafter == "self"
+               else dict(draft_cfg=cfg, draft_params=dkw["draft_params"])))
+    assert eng2.spec is not None and eng2.spec.k == 2
+    assert eng2.spec.rounds == eng.spec.rounds
+    got = eng2.run()
+    assert_streams_equal(base_eng, base, eng2, got)
+
+
+def test_spec_constructor_validation(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="spec_k"):
+        make_engine(cfg, params, SCFGS["greedy"], spec_k=-1)
+    with pytest.raises(ValueError, match="require spec_k"):
+        make_engine(cfg, params, SCFGS["greedy"],
+                    draft_params=T.init(cfg, jax.random.PRNGKey(1)))
+    bad_vocab = registry.get("stablelm-1.6b").reduced(vocab=256)
+    with pytest.raises(ValueError, match="vocab"):
+        make_engine(cfg, params, SCFGS["greedy"], spec_k=2,
+                    draft_cfg=bad_vocab,
+                    draft_params=T.init(bad_vocab, jax.random.PRNGKey(1)))
+
+
+@pytest.mark.slow
+def test_spec_soak_20_reps(setup, baselines):
+    """20 fresh speculative engines, identical streams every time (and equal
+    to the non-speculative baseline) — no hidden run-to-run state."""
+    cfg, params, prompts = setup
+    base_eng, base = baselines["seeded"]
+    for rep in range(20):
+        eng, got = run(cfg, params, prompts, SCFGS["seeded"], spec_k=4)
+        assert_streams_equal(base_eng, base, eng, got)
