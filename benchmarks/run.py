@@ -81,6 +81,8 @@ def summarize():
                 "kernel_bwd", "best worker-parallel modeled speedup",
                 best["modeled_speedup"], "x",
                 modeled_util=best["worker_parallel"]["modeled_utilization"],
+                modeled_makespan=best["worker_parallel"].get(
+                    "modeled_makespan"),
                 schedule=best["schedule"], causal=best["causal"],
                 bitwise_identical=all(r.get("bitwise_identical")
                                       for r in reals)))
@@ -119,6 +121,9 @@ def summarize():
             cases.get("continuous_vs_static_b1"), "x",
             decode_tps=cases.get("continuous_s4_decode_tps"),
             n_slots=bs.get("n_slots"),
+            # speculative decoding (verified exact acceptance) axis
+            spec_speedup_k4=cases.get("spec_k4_vs_nonspec"),
+            spec_accept_rate=cases.get("spec_k4_accept_rate"),
             # sharded-engine axis (tokens bitwise == single-device per run)
             tp_decode_tps={f"tp{n}": cases.get(f"continuous_tp{n}_decode_tps")
                            for n in bs.get("tp_degrees", [])}))

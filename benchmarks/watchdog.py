@@ -1,0 +1,180 @@
+"""Bench regression watchdog: gate the BENCH_summary.json trajectory.
+
+The repo's benchmark artifacts (``BENCH_*.json`` → ``BENCH_summary.json``)
+have always been recorded but never *enforced* — a PR could halve serve
+throughput and CI would stay green.  This gate fixes that:
+
+  ``--record``   flatten the current summary's watched metrics into
+                 ``benchmarks/BASELINES.json`` (the committed baseline);
+  ``--check``    compare the current summary against the baselines with a
+                 per-metric ratio tolerance; exit 1 on any regression beyond
+                 tolerance (or a watched metric disappearing).
+
+Because CI checks the *committed* artifacts (``run.py --summary-only``
+rebuilds the summary deterministically from them), the gate itself is
+deterministic — no CI-runner jitter.  Tolerances are still per-metric:
+pure/modeled quantities (simulator utilizations, placement-optimality
+counts, acceptance rates) get tight-to-zero tolerance, wall-clock-derived
+ones (tok/s, speedup ratios recorded on whatever machine ran the suite) get
+loose ones, so re-recording on a different box doesn't trip the gate while
+a real algorithmic regression does.
+
+Intentional regressions (a tradeoff PR) pass ``--allow-regress metric1,m2``
+and re-record; the allow list is explicit in the CI log, never silent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+ART_DIR = os.path.dirname(os.path.abspath(__file__))
+SUMMARY_PATH = os.path.join(ART_DIR, "BENCH_summary.json")
+BASELINES_PATH = os.path.join(ART_DIR, "BASELINES.json")
+
+# metric -> (direction, ratio tolerance).  "higher" means higher is better:
+# regress iff current < baseline * (1 - tol).  "lower" means lower is better:
+# regress iff current > baseline * (1 + tol).
+RULES: Dict[str, Tuple[str, float]] = {
+    # pure DAG-model quantities — bit-stable, any drift is a real change
+    "kernel_bwd.value": ("higher", 0.01),            # modeled speedup (x)
+    "kernel_bwd.modeled_utilization": ("higher", 0.01),
+    "kernel_bwd.modeled_makespan": ("lower", 0.01),
+    "masks.value": ("higher", 0.0),                  # placements at the bound
+    "masks.modeled_utilization": ("higher", 0.01),
+    # measured wall-clock quantities — machine-dependent, loose tolerance
+    "ring.value": ("higher", 0.25),                  # zigzag vs contig (x)
+    "serve.value": ("higher", 0.5),        # continuous vs static-b1 (x)
+    "serve.decode_tps": ("higher", 0.5),
+    "serve.spec_speedup_k4": ("higher", 0.25),
+    # exact by construction for self-draft — zero tolerance
+    "serve.spec_accept_rate": ("higher", 0.0),
+}
+
+
+def flatten_summary(summary: Dict) -> Dict[str, float]:
+    """``{"<suite>.<field>": value}`` for every watched numeric field."""
+    out: Dict[str, float] = {}
+    for row in summary.get("suites", []):
+        suite = row.get("suite")
+        for field, val in row.items():
+            key = f"{suite}.{field}"
+            if key in RULES and isinstance(val, (int, float)) and not isinstance(val, bool):
+                out[key] = float(val)
+    return out
+
+
+def record(summary: Dict, path: str = BASELINES_PATH) -> Dict:
+    """Write the current watched metrics as the committed baseline."""
+    metrics = flatten_summary(summary)
+    obj = {
+        "source": "benchmarks/watchdog.py --record over BENCH_summary.json",
+        "rules": {k: {"direction": d, "tolerance": t}
+                  for k, (d, t) in sorted(RULES.items()) if k in metrics},
+        "metrics": {k: metrics[k] for k in sorted(metrics)},
+    }
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[watchdog] recorded {len(metrics)} baselines -> {path}")
+    return obj
+
+
+def check(summary: Dict, baselines: Dict,
+          allow_regress: Sequence[str] = ()) -> Tuple[List[str], List[str]]:
+    """Compare current metrics against baselines.
+
+    Returns ``(failures, report_lines)``; empty failures = gate passes.
+    Improvements and unrecorded new metrics are reported, never fatal —
+    re-record to ratchet the baseline.
+    """
+    current = flatten_summary(summary)
+    base = baselines.get("metrics", {})
+    allowed = set(allow_regress)
+    failures: List[str] = []
+    lines: List[str] = []
+    for key in sorted(set(base) | set(current)):
+        direction, tol = RULES.get(key, ("higher", 0.0))
+        b, c = base.get(key), current.get(key)
+        if b is None:
+            lines.append(f"  NEW       {key} = {c:g} (unrecorded; run "
+                         "--record to start gating it)")
+            continue
+        if c is None:
+            msg = f"{key}: watched metric disappeared (baseline {b:g})"
+            if key in allowed:
+                lines.append(f"  ALLOWED   {msg}")
+            else:
+                failures.append(msg)
+                lines.append(f"  FAIL      {msg}")
+            continue
+        if direction == "higher":
+            bad = c < b * (1.0 - tol)
+            improved = c > b
+        else:
+            bad = c > b * (1.0 + tol)
+            improved = c < b
+        ratio = (c / b) if b else float("inf")
+        detail = (f"{key}: {c:g} vs baseline {b:g} "
+                  f"({ratio:.3f}x, {direction} is better, tol {tol:g})")
+        if bad and key in allowed:
+            lines.append(f"  ALLOWED   {detail}")
+        elif bad:
+            failures.append(detail)
+            lines.append(f"  FAIL      {detail}")
+        elif improved:
+            lines.append(f"  IMPROVED  {detail}")
+        else:
+            lines.append(f"  ok        {detail}")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks/watchdog.py",
+        description="Record/check benchmark baselines over BENCH_summary.json")
+    ap.add_argument("--summary", default=SUMMARY_PATH,
+                    help="summary path (default benchmarks/BENCH_summary.json)")
+    ap.add_argument("--baselines", default=BASELINES_PATH,
+                    help="baselines path (default benchmarks/BASELINES.json)")
+    ap.add_argument("--record", action="store_true",
+                    help="write the current metrics as the new baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the current metrics against the baseline; "
+                         "exit 1 on regression beyond tolerance")
+    ap.add_argument("--allow-regress", default="", metavar="K1,K2",
+                    help="comma-separated metric keys allowed to regress "
+                         "this check (explicit tradeoffs only)")
+    args = ap.parse_args(argv)
+    if not args.record and not args.check:
+        ap.error("nothing to do: pass --record and/or --check")
+
+    with open(args.summary) as f:
+        summary = json.load(f)
+    if args.record:
+        record(summary, args.baselines)
+    if args.check:
+        if not os.path.exists(args.baselines):
+            print(f"[watchdog] no baselines at {args.baselines}; run "
+                  "--record first", file=sys.stderr)
+            return 1
+        with open(args.baselines) as f:
+            baselines = json.load(f)
+        allow = [k for k in args.allow_regress.split(",") if k]
+        failures, lines = check(summary, baselines, allow_regress=allow)
+        print(f"[watchdog] checking {args.summary} against {args.baselines}"
+              + (f" (allow-regress: {', '.join(allow)})" if allow else ""))
+        for line in lines:
+            print(line)
+        if failures:
+            print(f"[watchdog] {len(failures)} regression(s) beyond "
+                  "tolerance", file=sys.stderr)
+            return 1
+        print("[watchdog] gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

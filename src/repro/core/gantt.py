@@ -6,6 +6,10 @@ absent from the chains by construction), and tasks on PARTIAL tiles — the ones
 the kernels mask-multiply — draw as ``%`` hatching instead of their q digit, so
 a glance at the chart shows where masking cost lives. :func:`render_block_map`
 draws the mask's tile classification itself.
+
+:mod:`repro.obs.export` generalizes this picture to a *loadable* artifact:
+the same per-worker lanes as Chrome-trace/Perfetto JSON, with a modeled lane
+(these simulator costs) next to an achieved lane (measured kernel wall time).
 """
 from __future__ import annotations
 

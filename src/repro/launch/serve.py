@@ -111,8 +111,15 @@ def _spec_kwargs(args):
 
 
 def _continuous(cfg, params, args):
+    from repro.obs import CompositeTracker, MemoryTracker, open_tracker
     page = 16
     mesh = _mesh_from_args(args)
+    tracker = open_tracker(args.track)
+    trace_mem = None
+    if args.trace_out is not None:
+        trace_mem = MemoryTracker()
+        tracker = CompositeTracker([tracker, trace_mem])
+    run_id = f"serve-{args.arch}-s{args.seed}"
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices "
               f"(tokens bitwise identical to single-device)")
@@ -128,7 +135,8 @@ def _continuous(cfg, params, args):
     eng = ContinuousEngine(cfg, params, n_slots=args.slots, max_seq=max_seq,
                            page_size=page, prefill_chunk=min(32, args.prompt_len),
                            scfg=SampleConfig(seed=args.seed), mesh=mesh,
-                           faults=injector, **_spec_kwargs(args))
+                           faults=injector, tracker=tracker, run_id=run_id,
+                           **_spec_kwargs(args))
     rng = np.random.RandomState(args.seed)
     for i in range(args.requests):
         plen = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1)
@@ -152,6 +160,14 @@ def _continuous(cfg, params, args):
         print(f"chaos: {len(injector.history)} faults landed, "
               f"{eng.preemptions} preemptions, landing digest "
               f"{injector.history_digest()[:16]}")
+    if args.trace_out is not None:
+        from repro.obs import export as EX
+        events = EX.spans_to_trace(trace_mem.events, process_name=run_id)
+        events += EX.attention_timeline(max_seq, cfg.head_dim, causal=True,
+                                        measure=True)
+        EX.write_trace(args.trace_out, events)
+        print(f"[trace] {len(events)} events -> {args.trace_out}", flush=True)
+    tracker.close()
     print("request 0 tokens:", out[0][:16].tolist())
     return out
 
@@ -189,6 +205,16 @@ def main(argv=None):
                          "slot revocation, decode stalls) against the "
                          "continuous engine; tokens are bitwise invariant "
                          "to it (README §Robustness)")
+    ap.add_argument("--track", default=None, metavar="JSONL",
+                    help="write the engine's repro.obs event stream here "
+                         "(serve_* events + profiler spans; --engine "
+                         "continuous). Tokens are bitwise invariant to "
+                         "tracking (tests/test_obs_prof.py)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Perfetto/Chrome-trace JSON: request/queue/"
+                         "prefill/decode spans plus the attention schedule "
+                         "timeline with modeled and achieved lanes "
+                         "(repro.obs.export); works with or without --track")
     args = ap.parse_args(argv)
 
     if (args.tp > 1 or args.mesh) and args.engine != "continuous":
@@ -199,6 +225,8 @@ def main(argv=None):
         ap.error("--spec-k applies to --engine continuous")
     if args.spec_k < 0:
         ap.error("--spec-k must be >= 0")
+    if (args.track or args.trace_out) and args.engine != "continuous":
+        ap.error("--track/--trace-out apply to --engine continuous")
 
     cfg = registry.get(args.arch)
     if args.reduced:

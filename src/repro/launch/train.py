@@ -79,6 +79,12 @@ def main(argv=None):
                          "live fingerprint stream is compared against it and "
                          "the first mismatch fires a fingerprint_divergence "
                          "event")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Perfetto/Chrome-trace JSON of the run: "
+                         "per-step phase spans (data/step/digest/ckpt) plus "
+                         "the attention schedule timeline with modeled and "
+                         "achieved per-worker lanes (repro.obs.export); "
+                         "works with or without --track")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="arm a seeded repro.faults checkpoint-IO plan: "
                          "saves at random --ckpt-every multiples fail their "
@@ -96,11 +102,21 @@ def main(argv=None):
     elif args.reduced:
         cfg = cfg.reduced()
 
-    from repro.obs import DivergenceAlarm, StepMeter, open_tracker
+    from repro.obs import (CompositeTracker, DivergenceAlarm, MemoryTracker,
+                           Profiler, StepMeter, open_tracker,
+                           record_state_digests)
     tracker = open_tracker(args.track)
+    trace_mem = None
+    if args.trace_out is not None:
+        # --trace-out needs the span stream even without --track: tee into an
+        # in-memory tracker and export at the end
+        trace_mem = MemoryTracker()
+        tracker = CompositeTracker([tracker, trace_mem])
+    run_id = f"train-{args.arch}-s{args.seed}"
+    prof = Profiler(tracker, run_id=run_id)
     tracker.log("run_config", {
         "arch": args.arch, "steps": args.steps, "batch": args.batch,
-        "seq": args.seq, "microbatches": args.microbatches,
+        "seq": args.seq, "microbatches": args.microbatches, "run_id": run_id,
         "seed": args.seed, "tune": args.tune, "verify": bool(args.verify)})
 
     modeled_step_s = None
@@ -199,7 +215,9 @@ def main(argv=None):
               "within the writer's retry budget)", flush=True)
 
     meter = StepMeter(modeled_step_s=modeled_step_s)
-    tracking = args.track is not None
+    # --trace-out implies per-step sync + events too: span durations must
+    # time real step work, not dispatch
+    tracking = args.track is not None or args.trace_out is not None
     tokens_per_step = args.batch * args.seq
     from repro.faults import armed_checkpoint
     pending = None
@@ -212,11 +230,23 @@ def main(argv=None):
             if args.die_at_step is not None and step == args.die_at_step:
                 print(f"simulated failure at step {step}", flush=True)
                 os._exit(17)
-            batch = data.batch(step)
+            with prof.span("train_data", scope=f"step:{step + 1}",
+                           lane="host", step=step + 1):
+                batch = data.batch(step)
             ts = time.time()
+            step_span = prof.begin("train_step", scope=f"step:{step + 1}",
+                                   lane="device", step=step + 1)
             state, metrics = step_fn(state, batch)
+            if tracking:
+                jax.block_until_ready(metrics["loss"])
+            prof.end(step_span)
             if chain is not None and (step + 1) % args.verify_every == 0:
-                chain.append(step + 1, state)
+                with prof.span("train_digest", scope=f"step:{step + 1}",
+                               lane="host", step=step + 1):
+                    # one hashing pass feeds the chain AND (when tracking)
+                    # the per-leaf digest record diff_runs triages with
+                    record_state_digests(state, step + 1, tracker=tracker,
+                                         chain=chain)
             if monitor is not None:
                 jax.block_until_ready(metrics["loss"])
                 if monitor.step(time.time() - ts) == "straggler":
@@ -242,11 +272,14 @@ def main(argv=None):
                       f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
                       f"({dt * 1e3:.0f} ms/step)", flush=True)
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                if pending is not None:
-                    pending.join()
-                pending = C.save(args.ckpt_dir, step + 1, state, async_=True)
-                if chain is not None:   # chain survives a crash after save
-                    _persist_chain()
+                with prof.span("train_ckpt", scope=f"step:{step + 1}",
+                               lane="host", step=step + 1):
+                    if pending is not None:
+                        pending.join()
+                    pending = C.save(args.ckpt_dir, step + 1, state,
+                                     async_=True)
+                    if chain is not None:   # chain survives a crash post-save
+                        _persist_chain()
         if pending is not None:
             pending.join()
     if monitor is not None:
@@ -273,6 +306,13 @@ def main(argv=None):
         tracker.log("run_summary", dict(summary,
                                         tokens_per_s_avg=meter.event()
                                         .get("tokens_per_s_avg", 0.0)))
+    if args.trace_out is not None:
+        from repro.obs import export as EX
+        events = EX.spans_to_trace(trace_mem.events, process_name=run_id)
+        events += EX.attention_timeline(args.seq, cfg.head_dim, causal=True,
+                                        measure=True)
+        EX.write_trace(args.trace_out, events)
+        print(f"[trace] {len(events)} events -> {args.trace_out}", flush=True)
     tracker.close()
     print(json.dumps(summary))
     return final_loss

@@ -14,7 +14,16 @@ being so — HEAL's instability failure mode, caught while the run is live).
   :mod:`repro.obs.alarm`     ``DivergenceAlarm`` — compares the live uint32
                              ``verify.digest.tree_fingerprint`` stream against
                              a reference run and fires a tracker event at the
-                             first diverging step.
+                             first diverging step;
+  :mod:`repro.obs.span`      deterministic-identity spans (ids are sha256 of
+                             ``(run_id, scope, phase)``, never clocks);
+  :mod:`repro.obs.prof`      the ``Profiler`` facade the serve engine and
+                             train loop thread, + ``record_state_digests``;
+  :mod:`repro.obs.export`    Perfetto/Chrome-trace JSON artifacts: modeled
+                             vs achieved schedule lanes + span timelines;
+  :mod:`repro.obs.report`    ``RunReport`` percentiles/counters and the
+                             ``diff_runs`` divergence triage (first step +
+                             leaf path).
 
 Event stream format: JSON Lines, one object per event, sorted keys, with a
 monotone ``seq`` number — see README §Observability for the schema.  Trackers
@@ -23,13 +32,20 @@ them already-materialized scalars.
 """
 from repro.obs.alarm import DivergenceAlarm
 from repro.obs.metrics import (Counter, Histogram, StepMeter, Timer,
-                               utilization_vs_modeled)
+                               quantile_lower, utilization_vs_modeled)
+from repro.obs.prof import Profiler, open_profiler, record_state_digests
+from repro.obs.report import RunDiff, RunReport, diff_runs
+from repro.obs.span import Span, SpanTracer, span_id
 from repro.obs.tracker import (CompositeTracker, JsonlTracker, MemoryTracker,
                                NoopTracker, Tracker, open_tracker, read_jsonl)
 
 __all__ = [
     "Tracker", "JsonlTracker", "NoopTracker", "CompositeTracker",
     "MemoryTracker", "open_tracker", "read_jsonl",
-    "Counter", "Timer", "Histogram", "StepMeter", "utilization_vs_modeled",
+    "Counter", "Timer", "Histogram", "StepMeter", "quantile_lower",
+    "utilization_vs_modeled",
     "DivergenceAlarm",
+    "Span", "SpanTracer", "span_id",
+    "Profiler", "open_profiler", "record_state_digests",
+    "RunReport", "RunDiff", "diff_runs",
 ]

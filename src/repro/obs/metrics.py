@@ -9,8 +9,28 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence
+
+
+def quantile_lower(values: Sequence[float], q: float) -> float:
+    """Exact order-statistic quantile with deterministic lowest-index
+    tie-break — ``numpy.quantile(values, q, method="lower")`` semantics.
+
+    The sorted sample is indexed at ``floor(q * (n - 1))``: always an
+    *observed* value (never interpolated), and because ``sorted`` is stable,
+    equal values resolve to the lowest index — so the result is a pure
+    function of the multiset of observations, bit-identical across runs and
+    platforms.  This is the one quantile definition every percentile in the
+    repo (``Histogram.percentile``, ``report.RunReport``) uses.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q}")
+    vs = sorted(values)
+    if not vs:
+        raise ValueError("quantile of an empty sample")
+    return vs[int(math.floor(q * (len(vs) - 1)))]
 
 
 class Counter:
@@ -60,30 +80,47 @@ class Timer:
 
 
 class Histogram:
-    """Fixed-boundary histogram (boundaries are upper edges; +inf implicit).
+    """Fixed-boundary histogram (boundaries are upper edges; +inf implicit)
+    that also retains the raw observations for **exact** percentiles.
 
-    Fixed boundaries keep the summary a pure function of the observed values
-    — no t-digest style data-dependent resizing that would make two identical
-    runs disagree on bucket layout."""
+    Fixed boundaries keep the bucket summary a pure function of the observed
+    values — no t-digest style data-dependent resizing that would make two
+    identical runs disagree on bucket layout.  Percentiles are *not* read off
+    the buckets (bucket interpolation is a layout-dependent estimate):
+    :meth:`percentile` is the exact order statistic over the retained sample,
+    ``sorted(values)[floor(q * (n - 1))]`` with stable lowest-index tie-break
+    — :func:`quantile_lower`, i.e. ``numpy.quantile(method="lower")``.  The
+    retained sample is O(n) host memory; these histograms aggregate per-run
+    host-side latencies (thousands of points), not per-token device data."""
 
     def __init__(self, name: str, boundaries: Sequence[float]):
         self.name = name
         self.boundaries = sorted(float(b) for b in boundaries)
         self.counts = [0] * (len(self.boundaries) + 1)
+        self.values: List[float] = []
         self.total = 0.0
         self.n = 0
         self.max = float("-inf")
 
     def observe(self, value: float) -> None:
         self.counts[bisect.bisect_left(self.boundaries, value)] += 1
+        self.values.append(float(value))
         self.total += value
         self.n += 1
         self.max = max(self.max, value)
+
+    def percentile(self, q: float) -> float:
+        """Exact order-statistic quantile of the observed sample (see
+        :func:`quantile_lower` for the pinned semantics)."""
+        return quantile_lower(self.values, q)
 
     def snapshot(self) -> Dict[str, float]:
         out = {f"{self.name}_count": float(self.n),
                f"{self.name}_mean": self.total / self.n if self.n else 0.0,
                f"{self.name}_max": self.max if self.n else 0.0}
+        if self.n:
+            for q, tag in ((0.5, "p50"), (0.9, "p90"), (0.99, "p99")):
+                out[f"{self.name}_{tag}"] = self.percentile(q)
         for edge, c in zip(self.boundaries + [float("inf")], self.counts):
             out[f"{self.name}_le_{edge:g}"] = float(c)
         return out

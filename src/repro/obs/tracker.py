@@ -25,6 +25,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from typing import Dict, Iterable, Mapping, Optional
 
 
@@ -127,15 +128,32 @@ def open_tracker(path: Optional[str], timestamps: bool = True) -> Tracker:
     return JsonlTracker(path, timestamps=timestamps) if path else NoopTracker()
 
 
-def read_jsonl(path: str, event: Optional[str] = None):
-    """Parse a tracker JSONL back into dicts (optionally one event type)."""
+def read_jsonl(path: str, event: Optional[str] = None, strict: bool = False):
+    """Parse a tracker JSONL back into dicts (optionally one event type).
+
+    Crash tolerance: a run killed mid-``write`` leaves at most one torn line,
+    and only at the end of the file (``JsonlTracker`` flushes every event by
+    default and each event is a single ``write`` call).  A malformed *final*
+    line is therefore skipped with a warning so a crashed run's trace is
+    still triageable; malformed interior lines mean real corruption and
+    always raise.  ``strict=True`` restores raise-on-any-bad-line.
+    """
     out = []
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if not line:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if not stripped:
+            continue
+        try:
+            rec = json.loads(stripped)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1 and not strict:
+                warnings.warn(
+                    f"{path}: skipping torn final line ({len(stripped)} "
+                    "bytes) — likely a crash mid-write", RuntimeWarning)
                 continue
-            rec = json.loads(line)
-            if event is None or rec.get("event") == event:
-                out.append(rec)
+            raise
+        if event is None or rec.get("event") == event:
+            out.append(rec)
     return out

@@ -268,7 +268,8 @@ class ContinuousEngine:
                  faults=None, max_queue_depth: Optional[int] = None,
                  snapshot_dir: Optional[str] = None,
                  snapshot_every: Optional[int] = None,
-                 spec_k: int = 0, draft_cfg=None, draft_params=None):
+                 spec_k: int = 0, draft_cfg=None, draft_params=None,
+                 run_id: Optional[str] = None):
         """``mesh``: optional :class:`jax.sharding.Mesh` with a ``"model"``
         axis — the jitted step becomes the TP-sharded shard_map step
         (:mod:`repro.serve.sharded`); tokens/logprobs are bitwise identical
@@ -307,6 +308,14 @@ class ContinuousEngine:
             from repro.obs.tracker import NoopTracker
             tracker = NoopTracker()
         self.tracker = tracker
+        # deterministic-identity span tracer over the same tracker: span ids
+        # hash (run_id, scope, phase); against a NoopTracker every profiler
+        # call short-circuits before reading a clock (repro.obs.span)
+        from repro.obs.prof import Profiler
+        self.prof = Profiler(tracker, run_id=run_id or "serve")
+        self._req_spans: Dict[int, object] = {}     # req_id -> request span
+        self._queue_spans: Dict[int, object] = {}   # req_id -> queue span
+        self._submit_step: Dict[int, int] = {}      # req_id -> submit step
         self.prefill_chunk = prefill_chunk
         self.max_seq = max_seq
         mpps = max_seq // page_size
@@ -346,7 +355,8 @@ class ContinuousEngine:
         else:
             from repro.serve.sharded import make_sharded_paged_step
             sharded = make_sharded_paged_step(cfg, mesh, params,
-                                              self.cache.pools)
+                                              self.cache.pools,
+                                              prof=self.prof)
             dev = mesh.devices.flat[0]
 
             def step(*args):
@@ -416,13 +426,25 @@ class ContinuousEngine:
             # the request stream, so the shed set replays identically
             self.rejected[req_id] = "queue_full"
             self._next_id = max(self._next_id, req_id + 1)
-            self.tracker.log("serve_shed", {
-                "request_id": req_id, "queue_depth": self.max_queue_depth})
+            shed = {"request_id": req_id,
+                    "queue_depth": self.max_queue_depth}
+            if self.prof.armed:
+                shed["at_s"] = round(self.prof.now(), 9)
+            self.tracker.log("serve_shed", shed)
             raise QueueFull(req_id, self.max_queue_depth)
         self.sched.submit(Request(req_id, tokens, max_new_tokens))
         if deadline_steps is not None:
             self._deadline[req_id] = self.engine_steps + deadline_steps
         self._next_id = max(self._next_id, req_id + 1)   # only after validation
+        # spans open only past validation: a shed/invalid request never gets
+        # one (its serve_shed mark is the record)
+        rs = self.prof.begin("request", scope=f"req:{req_id}",
+                             lane=f"req{req_id}", prompt_len=len(tokens))
+        if rs is not None:
+            self._req_spans[req_id] = rs
+            self._queue_spans[req_id] = self.prof.begin(
+                "queue", scope=f"req:{req_id}", parent=rs, lane=f"req{req_id}")
+            self._submit_step[req_id] = self.engine_steps
         self.tracker.log("serve_submit", {
             "request_id": req_id, "prompt_len": len(tokens),
             "max_new_tokens": max_new_tokens})
@@ -468,15 +490,21 @@ class ContinuousEngine:
         return fits
 
     def _chunked_prefill(self, slot: int, tokens: np.ndarray,
-                         rows: Optional[list] = None):
+                         rows: Optional[list] = None,
+                         scope: Optional[str] = None):
         """Run ``tokens`` through the paged step in fixed-size chunks, writing
         their K/V into ``slot``'s pages. Returns the last chunk's logits.
         Shared by fresh prefill and preemption-restore recompute — same code
-        path, so the invariance-by-chunk-size proof covers both."""
+        path, so the invariance-by-chunk-size proof covers both.  ``scope``
+        (e.g. ``"req:3"``) keys per-chunk profiler spans."""
         plen, C = len(tokens), self.prefill_chunk
         table = self.cache.device_page_table([slot])     # fixed for the prefill
         logits = None
         for start in range(0, plen, C):
+            span = (self.prof.begin("prefill_chunk",
+                                    scope=f"{scope}/pos:{start}",
+                                    lane=f"slot{slot}")
+                    if scope is not None else None)
             pos = np.arange(start, start + C, dtype=np.int32)
             valid = pos < plen
             toks = np.where(valid, tokens[np.minimum(pos, plen - 1)], 0)
@@ -487,6 +515,7 @@ class ContinuousEngine:
                 jnp.asarray(wp), jnp.asarray(wo))
             if rows is not None:         # valid rows only, raw dtype (bitwise)
                 rows.append(np.asarray(logits[0, : min(C, plen - start)]))
+            self.prof.end(span, n_valid=int(valid.sum()))
         return logits
 
     def _prefill(self, slot: int, req: Request) -> None:
@@ -502,27 +531,38 @@ class ContinuousEngine:
         lay = self.cache.layout
         self.cache.alloc(slot, lay.pages_for(len(req.tokens) + req.max_new_tokens))
         plen, C = len(req.tokens), self.prefill_chunk
+        qs = self._queue_spans.pop(req.id, None)
+        self.prof.end(qs, slot=slot, queued_steps=self.engine_steps
+                      - self._submit_step.get(req.id, self.engine_steps))
+        rspan = self._req_spans.get(req.id)
         resume = self._resume.pop(req.id, None)
         if resume is not None:
             produced, lps = resume
             prefix = np.asarray(list(req.tokens) + list(produced[:-1]),
                                 np.int32)
-            self._chunked_prefill(slot, prefix)
+            ps = self.prof.begin("prefill", scope=f"req:{req.id}/restore",
+                                 parent=rspan, lane=f"slot{slot}",
+                                 step=self.engine_steps)
+            self._chunked_prefill(slot, prefix, scope=f"req:{req.id}/restore")
             if self.spec is not None:
                 # the drafter's KV over the same prefix, recomputed the same
                 # way — so post-restore drafts (and hence round boundaries)
                 # replay bitwise (no-op for self-draft: shared pools)
                 self.spec.prefill(self, slot, prefix)
             self._slots[slot] = st = _Active(req, list(produced), list(lps))
+            self.prof.end(ps, prompt_len=len(prefix), restored=True,
+                          tokens_kept=len(produced))
             self.tracker.log("serve_restore", {
                 "request_id": req.id, "slot": slot,
                 "recomputed_positions": len(prefix),
                 "tokens_kept": len(produced)})
             self._finish_check(st)
             return
+        ps = self.prof.begin("prefill", scope=f"req:{req.id}", parent=rspan,
+                             lane=f"slot{slot}", step=self.engine_steps)
         rows = [] if self._capture else None
         logits = self._chunked_prefill(slot, np.asarray(req.tokens, np.int32),
-                                       rows)
+                                       rows, scope=f"req:{req.id}")
         if self.spec is not None:
             self.spec.prefill(self, slot, np.asarray(req.tokens, np.int32))
         if self._capture:
@@ -532,6 +572,12 @@ class ContinuousEngine:
                                         jnp.asarray([0], jnp.int32))
         self._slots[slot] = st = _Active(req, [int(first[0])],
                                          [float(first_lp[0])])
+        if ps is not None:    # TTFT: submit (request-span begin) → first token
+            ttft = (self.prof.now() - rspan.begin_s if rspan is not None
+                    else None)
+            self.prof.end(ps, prompt_len=plen, chunks=-(-plen // C),
+                          **({"ttft_s": round(ttft, 9)}
+                             if ttft is not None else {}))
         self.tracker.log("serve_prefill", {
             "request_id": req.id, "slot": slot, "prompt_len": plen,
             "chunks": -(-plen // C)})
@@ -561,9 +607,16 @@ class ContinuousEngine:
         self.sched.release(slot)
         self.sched.submit(st.req)       # re-enters FCFS at its original id
         self.preemptions += 1
-        self.tracker.log("serve_preempt", {
-            "request_id": st.req.id, "slot": slot, "reason": reason,
-            "tokens_kept": len(st.produced)}, step=self.engine_steps)
+        data = {"request_id": st.req.id, "slot": slot, "reason": reason,
+                "tokens_kept": len(st.produced)}
+        if self.prof.armed:             # timeline instant + a fresh queue
+            data["at_s"] = round(self.prof.now(), 9)   # span for the re-wait
+            self._submit_step[st.req.id] = self.engine_steps
+            self._queue_spans[st.req.id] = self.prof.begin(
+                "queue", scope=f"req:{st.req.id}/preempt{self.preemptions}",
+                parent=self._req_spans.get(st.req.id),
+                lane=f"req{st.req.id}")
+        self.tracker.log("serve_preempt", data, step=self.engine_steps)
 
     def _apply_faults(self, step_idx: int) -> None:
         """Consume this step's scheduled faults. May raise ``EngineCrash``."""
@@ -623,6 +676,10 @@ class ContinuousEngine:
                 produced, _ = self._resume.pop(rid, ([], []))
                 self.cancelled[rid] = np.asarray(produced, np.int32)
                 del self._deadline[rid]
+                self.prof.end(self._queue_spans.pop(rid, None),
+                              cancelled=True)
+                self.prof.end(self._req_spans.pop(rid, None),
+                              cancelled=True, n_tokens=len(produced))
                 self.tracker.log("serve_cancel", {
                     "request_id": rid, "where": "pending",
                     "tokens_kept": len(produced)}, step=step_idx)
@@ -634,6 +691,8 @@ class ContinuousEngine:
                 self.cache.free_slot(slot)          # immediate reclamation
                 self.sched.release(slot)
                 del self._deadline[rid]
+                self.prof.end(self._req_spans.pop(rid, None),
+                              cancelled=True, n_tokens=len(st.produced))
                 self.tracker.log("serve_cancel", {
                     "request_id": rid, "where": "active",
                     "tokens_kept": len(st.produced)}, step=step_idx)
@@ -658,8 +717,13 @@ class ContinuousEngine:
             # speculative round: draft spec_k, verify, commit the accepted
             # prefix — up to spec_k+1 tokens per slot per engine step, every
             # one bitwise identical to the plain path (repro.serve.spec)
+            span = self.prof.begin("spec_round", scope=f"step:{step_idx}",
+                                   lane="engine", step=step_idx)
             self.spec.round(self, live)
+            self.prof.end(span, live_slots=len(live))
         elif live:
+            span = self.prof.begin("decode", scope=f"step:{step_idx}",
+                                   lane="engine", step=step_idx)
             lay = self.cache.layout
             n = lay.n_slots
             toks = np.zeros((n, 1), np.int32)
@@ -689,6 +753,7 @@ class ContinuousEngine:
                 st.produced.append(int(nxt[s]))
                 st.logprobs.append(float(lps[s]))
                 self._finish_check(st)
+            self.prof.end(span, live_slots=len(live), committed=len(live))
             self.tracker.log("serve_decode", {"live_slots": len(live)},
                              step=self.decode_steps)
 
@@ -700,6 +765,9 @@ class ContinuousEngine:
             self._deadline.pop(st.req.id, None)
             self.cache.free_slot(s)
             self.sched.release(s)
+            self.prof.end(self._req_spans.pop(st.req.id, None),
+                          n_tokens=len(st.produced), slot=s)
+            self._submit_step.pop(st.req.id, None)
             self.tracker.log("serve_done", {
                 "request_id": st.req.id, "slot": s,
                 "n_tokens": len(st.produced),

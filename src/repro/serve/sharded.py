@@ -24,6 +24,7 @@ scheduler, page allocator, samplers — is untouched: it only ever sees full
 from __future__ import annotations
 
 import functools
+import json
 
 import jax
 from jax.experimental.shard_map import shard_map
@@ -116,7 +117,7 @@ def _builder_cache(cfg, mesh):
     return make
 
 
-def make_sharded_paged_step(cfg, mesh, params, caches):
+def make_sharded_paged_step(cfg, mesh, params, caches, prof=None):
     """Build the jitted TP-sharded paged step for ``cfg`` on ``mesh``.
 
     ``params`` / ``caches`` are example pytrees (specs are per-leaf); the
@@ -124,5 +125,16 @@ def make_sharded_paged_step(cfg, mesh, params, caches):
     minus ``cfg``.  The mesh must carry a ``"model"`` axis; any other axes
     (e.g. a ``"data"`` axis from a mesh reshape) are replicated over, which is
     how a (2, 2) mesh serves bitwise-identically to a (4,) mesh.
+
+    ``prof``: optional :class:`repro.obs.prof.Profiler` — wraps the build in
+    a ``sharded_build`` span recording the TP degree and mesh axes (a no-op
+    when disarmed; the step itself is never profiled from inside, trackers
+    stay host-side only).
     """
-    return _builder_cache(cfg, mesh)(params, caches)
+    if prof is None:
+        return _builder_cache(cfg, mesh)(params, caches)
+    axes = {str(k): int(v) for k, v in mesh.shape.items()}
+    with prof.span("sharded_build", scope=f"mesh:{sorted(axes.items())}",
+                   lane="engine", tp=axes.get("model", 1),
+                   mesh_axes=json.dumps(axes, sort_keys=True)):
+        return _builder_cache(cfg, mesh)(params, caches)

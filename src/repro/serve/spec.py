@@ -222,14 +222,22 @@ class Speculator:
             eng.cache.pools = pools
             drafts = toks[:, :k]
         else:
-            dtoks, _, self.pools = self._self_feed(
-                eng, self.dparams, self.pools, tok0, feed, pos, table, wp,
-                wo, rids, steps0, sharded=False)
+            # separate drafter: the two scans get their own profiler spans
+            # (the engine wraps the whole round in ``spec_round``); self-draft
+            # fuses draft+verify into one scan, so only the round span exists
+            with eng.prof.span("spec_draft", scope=f"step:{eng.engine_steps}",
+                               lane="engine", k=k):
+                dtoks, _, self.pools = self._self_feed(
+                    eng, self.dparams, self.pools, tok0, feed, pos, table, wp,
+                    wo, rids, steps0, sharded=False)
             drafts = dtoks[:, :k]
             self.draft_steps += S
             feed[0], feed[1:] = tok0[:, 0], drafts.T
-            toks, lps, pools = self._verify(eng, feed, pos, table, wp, wo,
-                                            rids, steps0, tok0)
+            with eng.prof.span("spec_verify",
+                               scope=f"step:{eng.engine_steps}",
+                               lane="engine", k=k):
+                toks, lps, pools = self._verify(eng, feed, pos, table, wp, wo,
+                                                rids, steps0, tok0)
             eng.cache.pools = pools
         eng.decode_steps += 1           # one verify dispatch per round
 

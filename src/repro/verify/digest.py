@@ -58,11 +58,20 @@ def combine_leaf_digests(named: Dict[str, str]) -> str:
     return h.hexdigest()
 
 
+def tree_leaf_digests(tree) -> Dict[str, str]:
+    """``{path: leaf_digest}`` for every leaf of a pytree.
+
+    The named intermediate of :func:`tree_digest`, exposed so observability
+    consumers (``repro.obs.report.diff_runs``) can name the first diverging
+    *leaf path* between two runs without hashing the state twice.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(p): leaf_digest(x) for p, x in flat}
+
+
 def tree_digest(tree) -> str:
     """sha256 hex over the path-sorted ``path=leaf_digest`` lines of a pytree."""
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return combine_leaf_digests({_path_str(p): leaf_digest(x)
-                                 for p, x in flat})
+    return combine_leaf_digests(tree_leaf_digests(tree))
 
 
 def batch_digest(batch: Dict) -> str:
